@@ -1,0 +1,73 @@
+"""Paper Fig. 13: end-to-end throughput improvement on three real jobs.
+
+Job model: iteration time = t_compute + t_comm, with t_comm the gradient
+allreduce time at the busbw our netsim measures for the job's placement
+(ECMP baseline vs C4P).  Sensitivity follows the paper: Job1 (GPT-22B,
+TP8+DP16) and Job2 (Llama-7B, ZeRO-DP) spend >30% of the iteration in
+communication; Job3 (GPT-175B, TP8/PP8) accumulates gradients over GA=16
+microbatches, so its relative comm cost is ~16x smaller.
+
+Paper: Job1 +15.95% (74.82 -> 86.76 samples/s), Job2 +14.1%
+(156.59 -> 178.65), Job3 ~ no change.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.c4p.master import C4PMaster, job_ring_requests
+from repro.core.c4p.pathalloc import ecmp_allocate
+from repro.core.netsim import allreduce_time_s, max_min_rates, ring_allreduce_busbw
+from repro.core.topology import paper_testbed
+
+# (name, params_B, dp_hosts, grad_accum, comm_fraction_at_c4p, paper_base, paper_gain)
+JOBS = [
+    ("job1_gpt22b_tp8dp16", 22e9, 16, 1, 0.32, 74.82, 15.95),
+    ("job2_llama7b_zerodp", 7e9, 2, 1, 0.31, 156.59, 14.1),
+    ("job3_gpt175b_tp8pp8_ga16", 175e9, 2, 16, 0.30, None, 0.0),
+]
+
+
+def busbw_pair(n_hosts: int, seed: int = 0):
+    topo = paper_testbed()
+    hosts = list(range(n_hosts))
+    reqs = job_ring_requests(0, hosts, topo.nics_per_host)
+    vals = []
+    for s in range(4):
+        flows = ecmp_allocate(topo, reqs, seed=seed + s)
+        vals.append(ring_allreduce_busbw(
+            topo, max_min_rates(topo, flows).conn_rate, 0, n_hosts))
+    ecmp = float(np.mean(vals))
+    m = C4PMaster(topo, qps_per_port=1)
+    m.startup_probe()
+    m.register_job(0, hosts)
+    c4p = m.job_busbw(m.evaluate(dynamic_lb=False, static_failover=False), 0)
+    return ecmp, float(c4p)
+
+
+def run() -> None:
+    for name, params, dp_hosts, ga, comm_frac, paper_base, paper_gain in JOBS:
+        us = timeit(lambda: busbw_pair(dp_hosts), repeats=1)
+        bw_e, bw_c = busbw_pair(dp_hosts)
+        grad_bytes = 2 * params / 8          # bf16 grads per TP-8 shard
+        n_ranks = dp_hosts * 8
+        t_comm_c = allreduce_time_s(grad_bytes, bw_c, n_ranks)
+        # calibrate per-microbatch compute so comm is `comm_frac` of one
+        # microbatch-plus-sync; with GA the sync happens ONCE per ga
+        # microbatches ("parameter updates occur only once every 16 steps")
+        t_micro = t_comm_c * (1 - comm_frac) / comm_frac
+        t_comm_e = t_comm_c * bw_c / max(bw_e, 1e-9)
+        thr_e = 1.0 / (ga * t_micro + t_comm_e)
+        thr_c = 1.0 / (ga * t_micro + t_comm_c)
+        gain = 100 * (thr_c / thr_e - 1)
+        eff_frac = t_comm_c / (ga * t_micro + t_comm_c)
+        derived = {
+            "ecmp_busbw_gbps": f"{bw_e:.1f}", "c4p_busbw_gbps": f"{bw_c:.1f}",
+            "comm_fraction": round(eff_frac, 3),
+            "throughput_gain_pct": f"{gain:.1f}",
+            "paper_gain_pct": paper_gain,
+        }
+        if paper_base:
+            derived["samples_per_s_scaled"] = f"{paper_base * (1 + gain/100):.1f}"
+            derived["paper_samples_per_s"] = paper_base
+        emit(f"fig13/{name}", us, derived)

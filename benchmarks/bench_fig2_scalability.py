@@ -1,0 +1,68 @@
+"""Paper Fig. 2: scalability loss grows with system scale.
+
+Effective vs ideal performance of a GPT-22B data-parallel job as the GPU
+count grows, under ECMP hashing in a multi-tenant fabric (the pre-C4P
+world).  Paper: at 512 GPUs effective performance is ~30% below ideal.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.c4p.master import job_ring_requests
+from repro.core.c4p.pathalloc import ecmp_allocate
+from repro.core.netsim import allreduce_time_s, max_min_rates, ring_allreduce_busbw
+from repro.core.topology import ClosTopology
+
+PARAMS = 22e9
+COMM_FRACTION_IDEAL = 0.30   # at ideal busbw (362 Gbps)
+
+
+FABRIC = dict(n_hosts=128, n_leaf_pairs=16, n_spines=8, n_host_groups=16)
+
+
+def efficiency(n_gpus: int, seed: int = 0) -> float:
+    """The job rents n_gpus of a FIXED shared 1024-GPU fabric; remaining
+    hosts run background tenants.  Scheduler fragmentation is modelled by
+    strided placement (ring neighbours land in different host groups)."""
+    n_hosts = max(n_gpus // 8, 1)
+    # a >=2-pod job (>128 GPUs here) additionally crosses the 3rd Clos tier,
+    # which runs oversubscribed in the production fabric
+    oversub = 1.0 if n_gpus <= 128 else (1.5 if n_gpus <= 256 else 2.0)
+    topo = ClosTopology(oversubscription=oversub, **FABRIC)
+    stride = max(topo.n_hosts // max(n_hosts, 1), 1)
+    hosts = [(i * stride) % topo.n_hosts for i in range(n_hosts)]
+    if n_hosts == 1:
+        bw = topo.nvlink_busbw_gbps
+    else:
+        free = sorted(set(range(topo.n_hosts)) - set(hosts))
+        vals = []
+        for s in range(2):
+            flows = ecmp_allocate(
+                topo, job_ring_requests(0, hosts, topo.nics_per_host), seed=seed + s)
+            half = len(free) // 2
+            for b in range(half):  # cross-group background tenants
+                flows += ecmp_allocate(topo, job_ring_requests(
+                    100 + b, [free[b], free[b + half]], topo.nics_per_host),
+                    seed=seed + 77 * b)
+            for i, f in enumerate(flows):
+                f.flow_id = i
+            vals.append(ring_allreduce_busbw(
+                topo, max_min_rates(topo, flows).conn_rate, 0, n_hosts))
+        bw = float(np.mean(vals))
+    n_ranks = max(n_gpus, 2)
+    t_comm_ideal = allreduce_time_s(2 * PARAMS / 8, topo.nvlink_busbw_gbps, n_ranks)
+    t_comp = t_comm_ideal / COMM_FRACTION_IDEAL * (1 - COMM_FRACTION_IDEAL)
+    t_comm = allreduce_time_s(2 * PARAMS / 8, bw, n_ranks)
+    return (t_comp + t_comm_ideal) / (t_comp + t_comm)
+
+
+def run() -> None:
+    us = timeit(lambda: efficiency(64), repeats=1)
+    for n in (8, 32, 64, 128, 256, 512):
+        eff = efficiency(n)
+        emit(f"fig2/scale_{n}gpus", us, {
+            "effective_over_ideal_pct": f"{100*eff:.1f}",
+            "loss_pct": f"{100*(1-eff):.1f}",
+            "paper_loss_at_512": 30.0,
+        })

@@ -1,0 +1,39 @@
+"""Paper Fig. 8: allreduce busbw with/without C4P bonded-port balance.
+
+Paper: without C4P busbw < 240 Gbps; with C4P ~360 Gbps (~+50%), ceiling
+362 Gbps set by the NVLink fabric.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.c4p.master import C4PMaster, job_ring_requests
+from repro.core.c4p.pathalloc import ecmp_allocate
+from repro.core.netsim import max_min_rates, ring_allreduce_busbw
+from repro.core.topology import paper_testbed
+
+
+def one(n_hosts: int, seeds=range(8)):
+    topo = paper_testbed()
+    hosts = list(range(n_hosts))
+    reqs = job_ring_requests(0, hosts, topo.nics_per_host)
+    ecmp = [ring_allreduce_busbw(
+        topo, max_min_rates(topo, ecmp_allocate(topo, reqs, seed=s)).conn_rate,
+        0, n_hosts) for s in seeds]
+    m = C4PMaster(topo, qps_per_port=1)
+    m.startup_probe()
+    m.register_job(0, hosts)
+    c4p = m.job_busbw(m.evaluate(dynamic_lb=False, static_failover=False), 0)
+    return float(np.mean(ecmp)), float(c4p)
+
+
+def run() -> None:
+    for n in (2, 4, 8, 16):
+        us = timeit(lambda: one(n, seeds=range(2)), repeats=1)
+        e, c = one(n)
+        emit(f"fig8/allreduce_{n}nodes", us, {
+            "ecmp_busbw_gbps": f"{e:.1f}", "c4p_busbw_gbps": f"{c:.1f}",
+            "gain_pct": f"{100*(c/e-1):.1f}", "paper_gain_pct": 50.0,
+            "nvlink_ceiling_gbps": 362.0,
+        })

@@ -1,0 +1,24 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows; ``derived`` carries
+the paper-comparable quantity (a percentage, busbw, ratio ...) as
+``key=value`` pairs joined by '|'.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Dict
+
+
+def emit(name: str, us_per_call: float, derived: Dict[str, object]) -> None:
+    d = "|".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{d}", flush=True)
+
+
+def timeit(fn: Callable, repeats: int = 3) -> float:
+    fn()  # warmup
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats * 1e6

@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9]
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+BENCHES = [
+    ("table3", "benchmarks.bench_table3_downtime"),
+    ("fig2", "benchmarks.bench_fig2_scalability"),
+    ("fig8", "benchmarks.bench_fig8_bonded_ports"),
+    ("fig9", "benchmarks.bench_fig9_multijob"),
+    ("fig11", "benchmarks.bench_fig11_linkfail"),
+    ("fig13", "benchmarks.bench_fig13_jobs"),
+    ("detection", "benchmarks.bench_detection_latency"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for tag, module in BENCHES:
+        if args.only and args.only != tag:
+            continue
+        try:
+            importlib.import_module(module).run()
+        except Exception as e:
+            failed.append(tag)
+            print(f"{tag}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end driver: fault-tolerant training with the full C4D loop.
+
+Trains a ~small decoder for a few hundred steps while faults are injected;
+C4D detects each one from enhanced-CCL telemetry, the steering service
+isolates the implicated node and swaps a backup in, and training resumes
+from the last (10-step-period) checkpoint — the paper's Fig. 1/3 lifecycle.
+
+    PYTHONPATH=src python examples/fault_tolerant_training.py [--steps 200]
+"""
+import argparse
+import json
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+from repro.common.config import ShapeSpec
+from repro.configs import get_smoke_config
+from repro.core.faults import Fault
+from repro.train.trainer import FaultInjector, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="smollm-135m")
+    args = ap.parse_args()
+
+    run = get_smoke_config(args.arch)
+    shape = ShapeSpec("train", run.train.seq_len, run.train.global_batch, "train")
+    workdir = tempfile.mkdtemp(prefix="repro_ft_")
+    trainer = Trainer(run, shape, workdir=workdir, sim_nodes=8)
+
+    n = args.steps
+    injector = FaultInjector({
+        n // 4: Fault("crash", rank=11),             # ECC/CUDA-style crash
+        n // 2: Fault("slow_src", rank=21),          # degraded NIC
+        3 * n // 4: Fault("straggler", rank=5, severity=25),  # compute straggler
+    })
+    report = trainer.train(n, injector=injector)
+
+    print(json.dumps({
+        "arch": run.model.name,
+        "steps_run": report.steps_run,
+        "restarts": report.restarts,
+        "re_run_steps_due_to_faults": report.downtime_steps,
+        "loss_first": round(report.losses[0], 4),
+        "loss_last": round(report.losses[-1], 4),
+        "detections": [
+            {k: d[k] for k in ("fault", "at_step", "verdicts", "isolated",
+                               "detection_s_model", "restored_step")}
+            for d in report.detections
+        ],
+        "checkpoints": trainer.ckpt.save_count,
+        "step_time": trainer.monitor.summary(),
+        "cluster_swaps": [(e.out_node, e.in_node, e.reason)
+                          for e in trainer.cluster.history],
+    }, indent=1, default=str))
+    assert report.restarts == 3, "all three faults must be handled"
+    assert report.losses[-1] < report.losses[0], "training must still converge"
+    print("FAULT-TOLERANT RUN OK")
+
+
+if __name__ == "__main__":
+    main()

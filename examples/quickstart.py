@@ -1,0 +1,41 @@
+"""Quickstart: train a small model for a few steps with the public API.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ShapeSpec
+from repro.configs import get_smoke_config
+from repro.models.model import build_model, synthetic_batch
+from repro.optim import adamw
+from repro.train.steps import make_train_step
+
+
+def main():
+    run = get_smoke_config("gemma2-2b")
+    model = build_model(run, use_kernel=False)
+    shape = ShapeSpec("train", run.train.seq_len, run.train.global_batch, "train")
+
+    params = model.init(jax.random.key(0))
+    opt_cfg = adamw.OptimizerConfig(kind="adamw")
+    opt_state = adamw.init_state(opt_cfg, params)
+    step = jax.jit(make_train_step(model, run, opt_cfg))
+
+    print(f"arch={run.model.name} params="
+          f"{sum(x.size for x in jax.tree.leaves(params)):,}")
+    for s in range(10):
+        batch = {k: jnp.asarray(v)
+                 for k, v in synthetic_batch(run.model, shape, seed=s).items()}
+        params, opt_state, metrics = step(params, opt_state, batch)
+        print(f"step {s}: loss={float(metrics['loss']):.4f} "
+              f"grad_norm={float(metrics['grad_norm']):.3f} "
+              f"lr={float(metrics['lr']):.2e}")
+
+
+if __name__ == "__main__":
+    main()

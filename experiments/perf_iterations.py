@@ -1,0 +1,96 @@
+"""Section-Perf hillclimb driver: lower a cell under named variants and
+report the three roofline terms per variant.
+
+    PYTHONPATH=src python experiments/perf_iterations.py --cell yi-34b:train_4k \
+        --variants baseline,attn_zero
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.common.config import SHAPES
+from repro.configs import get_config
+from repro.launch import mesh as meshmod
+from repro.launch import roofline as rl
+from repro.launch.dryrun import full_units, lower_cell, roofline_cell, with_units
+
+
+def apply_variant(run, name: str):
+    if "+" in name:  # composed variants, applied left to right
+        for part in name.split("+"):
+            run = apply_variant(run, part)
+        return run
+    p = run.parallel
+    if name == "baseline":
+        return run
+    if name == "attn_zero":
+        return run.replace(parallel=dataclasses.replace(p, attn_zero_sharding="on"))
+    if name == "attn_sp":
+        return run.replace(parallel=dataclasses.replace(
+            p, attn_activation_sharding="sequence"))
+    if name == "attn_batch":
+        return run.replace(parallel=dataclasses.replace(
+            p, attn_activation_sharding="batch"))
+    if name == "remat_dots":
+        return run.replace(parallel=dataclasses.replace(p, remat="dots"))
+    if name == "moe_zero":
+        return run.replace(parallel=dataclasses.replace(
+            p, moe_weight_sharding="zero"))
+    if name == "kv_fp8":
+        return run.replace(parallel=dataclasses.replace(
+            p, kv_cache_dtype="float8_e4m3fn"))
+    if name == "grad_compress":
+        return run.replace(parallel=dataclasses.replace(p, grad_compression="int8"))
+    if name.startswith("mb"):
+        return run.replace(parallel=dataclasses.replace(p, microbatches=int(name[2:])))
+    if name.startswith("cf"):  # MoE capacity factor
+        m = dataclasses.replace(run.model.moe, capacity_factor=float(name[2:]))
+        return run.replace(model=dataclasses.replace(run.model, moe=m))
+    if name.startswith("cechunk"):
+        import repro.models.model as mm
+        mm.CE_CHUNK = int(name[7:])
+        return run
+    raise ValueError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    arch, shape_name = args.cell.split(":")
+    shape = SHAPES[shape_name]
+    mesh = meshmod.make_production_mesh(multi_pod=False)
+    os.makedirs(args.out, exist_ok=True)
+
+    for vname in args.variants.split(","):
+        run = apply_variant(get_config(arch), vname)
+        rec = roofline_cell(run, shape, mesh, "single_pod_16x16", 256, arch)
+        # memory check on the real (scan) lowering
+        compiled = lower_cell(run, shape, mesh)
+        ma = compiled.memory_analysis()
+        del compiled
+        rec["mem_peak_cpu_raw_gib"] = float(
+            (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+             - ma.alias_size_in_bytes) / 2**30)
+        path = os.path.join(args.out, f"{arch}__{shape_name}__{vname}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        print(f"[{vname}] comp={rec['t_comp_s']:.3g}s mem_tpu={rec['t_mem_tpu_s']:.3g}s "
+              f"coll={rec['t_coll_s']:.3g}s dom={rec['dominant']} "
+              f"frac={rec['roofline_fraction']:.4f} "
+              f"colls={rec['collective_counts']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Generate the EXPERIMENTS.md dry-run + roofline tables from the JSONs.
+
+    python experiments/summarize.py > experiments/tables.md
+"""
+import glob
+import json
+import os
+
+GiB = 2 ** 30
+
+
+def load(mesh):
+    out = {}
+    for f in sorted(glob.glob(f"experiments/dryrun/{mesh}__*.json")):
+        d = json.load(open(f))
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def main():
+    single = load("single_pod_16x16")
+    multi = load("multi_pod_2x16x16")
+
+    print("### Dry-run: per-cell compile results\n")
+    print("| arch | shape | 1-pod status | mem/dev GiB (tpu-corr / cpu-raw) | fits 16GiB | 2-pod status | 2-pod mem GiB | collectives (scan-once) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(single):
+        d = single[key]
+        m = multi.get(key, {})
+        if d["status"] == "skipped_by_design":
+            print(f"| {key[0]} | {key[1]} | skip (long-ctx n/a) | — | — | skip | — | — |")
+            continue
+        mem = d["memory"]
+        mm = m.get("memory", {})
+        colls = d.get("collectives_scanbody_once", {}).get("counts", {})
+        cstr = " ".join(f"{k}:{v}" for k, v in sorted(colls.items()))
+        print(f"| {key[0]} | {key[1]} | {d['status']} | "
+              f"{mem['tpu_corrected_peak_bytes']/GiB:.2f} / {mem['peak_estimate_bytes']/GiB:.2f} | "
+              f"{mem['fits']} | {m.get('status','-')} | "
+              f"{mm.get('tpu_corrected_peak_bytes',0)/GiB:.2f} | {cstr} |")
+
+    print("\n### Roofline (single-pod, 256 x v5e; trip-count-corrected)\n")
+    print("| arch | shape | t_comp s | t_mem s (tpu-struct) | t_mem s (hlo-ub) | t_coll s | dominant | MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(single):
+        d = single[key]
+        r = d.get("roofline")
+        if not r:
+            continue
+        print(f"| {key[0]} | {key[1]} | {r['t_comp_s']:.3g} | {r['t_mem_tpu_s']:.3g} | "
+              f"{r.get('t_mem_hlo_s', 0):.3g} | {r['t_coll_s']:.3g} | {r['dominant']} | "
+              f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Scan helper with an unroll escape hatch for cost analysis.
+
+XLA's ``cost_analysis()`` counts a ``lax.scan`` body ONCE, not multiplied by
+the trip count.  The roofline pass therefore lowers reduced-depth models
+with ``REPRO_UNROLL_SCANS=1``, which turns every inner scan (microbatch
+accumulation, chunked CE, chunked attention, SSD/mLSTM chunk scans) into an
+unrolled python loop so per-op FLOPs/bytes/collectives are exact.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def unroll_scans() -> bool:
+    return os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"
+
+
+def scan(body, init, xs, length=None):
+    """lax.scan, or an unrolled loop under REPRO_UNROLL_SCANS=1."""
+    if not unroll_scans():
+        return jax.lax.scan(body, init, xs, length=length)
+    if xs is None:
+        n = length
+        slices = [None] * n
+    else:
+        leaves = jax.tree.leaves(xs)
+        n = leaves[0].shape[0] if leaves else length
+        slices = [jax.tree.map(lambda a: a[i], xs) for i in range(n)]
+    carry = init
+    ys = []
+    for s in slices:
+        carry, y = body(carry, s)
+        ys.append(y)
+    if ys and any(l is not None for l in jax.tree.leaves(ys[0], is_leaf=lambda x: x is None)):
+        import jax.numpy as jnp
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked

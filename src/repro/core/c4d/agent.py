@@ -1,0 +1,88 @@
+"""C4a — the per-node C4 agent (paper Fig. 4).
+
+The agent is the intermediary between the enhanced CCL (which emits raw
+records on every rank of the node) and the central C4D master.  To keep the
+monitoring cost low it batches records per window and *prefilters*: healthy
+transport records are aggregated into per-edge summaries, while suspicious
+records (robust z-score above a loose local threshold) are forwarded raw.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.c4d.telemetry import (Heartbeat, OpRecord, TelemetryWindow,
+                                      TransportRecord)
+
+
+@dataclass
+class EdgeSummary:
+    src_rank: int
+    dst_rank: int
+    count: int
+    median_transfer: float
+    median_wait: float
+    max_transfer: float
+    total_bytes: int
+
+
+@dataclass
+class AgentReport:
+    node_id: int
+    window_id: int
+    summaries: List[EdgeSummary] = field(default_factory=list)
+    raw_suspects: List[TransportRecord] = field(default_factory=list)
+    heartbeats: List[Heartbeat] = field(default_factory=list)
+    ops_count: int = 0
+
+
+class C4Agent:
+    def __init__(self, node_id: int, ranks: Sequence[int],
+                 suspect_z: float = 3.0):
+        self.node_id = node_id
+        self.ranks = set(ranks)
+        self.suspect_z = suspect_z
+
+    def collect(self, window: TelemetryWindow) -> AgentReport:
+        """Batch this node's records for one window."""
+        mine_t = [t for t in window.transports if t.src_rank in self.ranks]
+        mine_h = [h for h in window.heartbeats if h.rank in self.ranks]
+        mine_o = [o for o in window.ops if o.rank in self.ranks]
+        report = AgentReport(self.node_id, window.window_id,
+                             heartbeats=mine_h, ops_count=len(mine_o))
+        by_edge: Dict[Tuple[int, int], List[TransportRecord]] = {}
+        for t in mine_t:
+            by_edge.setdefault((t.src_rank, t.dst_rank), []).append(t)
+        transfers = np.array([t.transfer for t in mine_t]) if mine_t else np.array([1.0])
+        med = float(np.median(transfers))
+        mad = float(np.median(np.abs(transfers - med))) * 1.4826 + 1e-12
+        for (s, r), recs in sorted(by_edge.items()):
+            ts = np.array([t.transfer for t in recs])
+            ws = np.array([t.wait for t in recs])
+            report.summaries.append(EdgeSummary(
+                s, r, len(recs), float(np.median(ts)), float(np.median(ws)),
+                float(ts.max()), int(sum(t.msg_bytes for t in recs))))
+            for t in recs:
+                if (t.transfer - med) / mad > self.suspect_z:
+                    report.raw_suspects.append(t)
+        return report
+
+
+def reports_to_window(reports: Sequence[AgentReport],
+                      template: TelemetryWindow) -> TelemetryWindow:
+    """Master-side reassembly: summaries become representative transport
+    records (median latency per edge), suspects are kept raw."""
+    win = TelemetryWindow(window_id=template.window_id, comms=template.comms,
+                          t_begin=template.t_begin, t_end=template.t_end)
+    for rep in reports:
+        win.heartbeats.extend(rep.heartbeats)
+        for s in rep.summaries:
+            win.transports.append(TransportRecord(
+                iteration=-1, src_rank=s.src_rank, dst_rank=s.dst_rank,
+                msg_bytes=s.total_bytes // max(s.count, 1),
+                t_post=0.0, t_start=s.median_wait,
+                t_end=s.median_wait + s.median_transfer))
+        win.transports.extend(rep.raw_suspects)
+    return win

@@ -1,0 +1,185 @@
+"""C4D detection analytics (paper section 3.1, Fig. 6 and Cases 1/2).
+
+Four syndromes over one telemetry window:
+
+  * communication slow      — delay-matrix analysis: a row of high values
+                              implicates the source rank, a column the
+                              destination rank, an isolated cell the link.
+  * non-communication slow  — receiver-driven ring scheduling: a long
+                              receiver wait on an edge whose transfer
+                              bandwidth is healthy implicates the *sender's*
+                              compute/data path.
+  * communication hang      — a rank stops progressing while peers advance,
+                              and its last completed event is a transport op.
+  * non-communication hang  — same, but the rank never reached the collective
+                              (stuck in compute/data loading).
+
+All statistics are robust (median/MAD) because exactly one-or-few entries
+are anomalous by construction — the paper's key insight is that BSP traffic
+is homogeneous, so *any* deviation is a hardware symptom.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.c4d.telemetry import TelemetryWindow, delay_matrix, wait_matrix
+
+# syndrome kinds
+COMM_SLOW_SRC = "comm_slow_source"
+COMM_SLOW_DST = "comm_slow_destination"
+COMM_SLOW_LINK = "comm_slow_link"
+NONCOMM_SLOW = "noncomm_slow"
+COMM_HANG = "comm_hang"
+NONCOMM_HANG = "noncomm_hang"
+
+
+@dataclass(frozen=True)
+class Verdict:
+    syndrome: str
+    rank: Optional[int] = None                 # implicated rank (if rank-level)
+    link: Optional[Tuple[int, int]] = None     # implicated (src, dst)
+    score: float = 0.0                         # robust z-score / evidence
+    detail: str = ""
+
+
+@dataclass
+class DetectorConfig:
+    mad_threshold: float = 5.0         # z-score threshold on MAD-normalised stats
+    row_col_fraction: float = 0.6      # fraction of a row/col anomalous => rank fault
+    hang_grace: float = 3.0            # multiples of median op period before hang
+    min_observations: int = 1
+
+
+def _robust_z(values: np.ndarray) -> np.ndarray:
+    """Median/MAD z-scores over finite entries (NaN-safe)."""
+    finite = values[np.isfinite(values)]
+    if finite.size == 0:
+        return np.full_like(values, np.nan)
+    med = np.median(finite)
+    mad = np.median(np.abs(finite - med))
+    scale = 1.4826 * mad + 1e-12 * max(abs(med), 1e-12) + 1e-30
+    return (values - med) / scale
+
+
+class DelayMatrixDetector:
+    """Paper Fig. 6: point / row / column outliers in D[src, dst]."""
+
+    def __init__(self, cfg: DetectorConfig = DetectorConfig()):
+        self.cfg = cfg
+
+    def analyze(self, d: np.ndarray) -> List[Verdict]:
+        cfg = self.cfg
+        z = _robust_z(d)
+        hot = (z > cfg.mad_threshold) & np.isfinite(d)
+        verdicts: List[Verdict] = []
+        n = d.shape[0]
+        used_rows, used_cols = set(), set()
+        for i in range(n):
+            row = hot[i, :]
+            obs = np.isfinite(d[i, :])
+            if obs.sum() >= cfg.min_observations and row.sum() >= max(
+                    1, cfg.row_col_fraction * obs.sum()) and row.sum() >= 2:
+                verdicts.append(Verdict(COMM_SLOW_SRC, rank=i,
+                                        score=float(np.nanmax(z[i, :])),
+                                        detail=f"row {i}: {int(row.sum())}/{int(obs.sum())} hot"))
+                used_rows.add(i)
+        for j in range(n):
+            col = hot[:, j]
+            obs = np.isfinite(d[:, j])
+            if obs.sum() >= cfg.min_observations and col.sum() >= max(
+                    1, cfg.row_col_fraction * obs.sum()) and col.sum() >= 2:
+                verdicts.append(Verdict(COMM_SLOW_DST, rank=j,
+                                        score=float(np.nanmax(z[:, j])),
+                                        detail=f"col {j}: {int(col.sum())}/{int(obs.sum())} hot"))
+                used_cols.add(j)
+        for i in range(n):
+            for j in range(n):
+                if hot[i, j] and i not in used_rows and j not in used_cols:
+                    verdicts.append(Verdict(COMM_SLOW_LINK, link=(i, j),
+                                            score=float(z[i, j]),
+                                            detail=f"point ({i},{j})"))
+        return verdicts
+
+
+class RingWaitDetector:
+    """Paper Case 2. For ring edge (i -> j): the receiver j posts its buffer
+    and waits. If the edge's *transfer* is healthy but j's wait is anomalously
+    long, the sender i was late into the collective => i is non-communication
+    slow (compute or data loading)."""
+
+    def __init__(self, cfg: DetectorConfig = DetectorConfig()):
+        self.cfg = cfg
+
+    def analyze(self, window: TelemetryWindow,
+                n_ranks: Optional[int] = None) -> List[Verdict]:
+        d = delay_matrix(window, n_ranks)
+        w = wait_matrix(window, n_ranks)
+        zd = _robust_z(d)
+        zw = _robust_z(w)
+        verdicts: List[Verdict] = []
+        hot_wait = (zw > self.cfg.mad_threshold) & np.isfinite(w)
+        healthy_link = ~((zd > self.cfg.mad_threshold) & np.isfinite(d))
+        n = w.shape[0]
+        scores: Dict[int, float] = {}
+        for i in range(n):
+            for j in range(n):
+                if hot_wait[i, j] and healthy_link[i, j]:
+                    # receiver j waited on sender i over a healthy link
+                    scores[i] = max(scores.get(i, 0.0), float(zw[i, j]))
+        for rank, score in sorted(scores.items()):
+            verdicts.append(Verdict(NONCOMM_SLOW, rank=rank, score=score,
+                                    detail="receiver wait w/ healthy transfer"))
+        return verdicts
+
+
+class HangDetector:
+    """Progress-based hang detection from per-rank heartbeats."""
+
+    def __init__(self, cfg: DetectorConfig = DetectorConfig()):
+        self.cfg = cfg
+
+    def analyze(self, window: TelemetryWindow) -> List[Verdict]:
+        if not window.heartbeats:
+            return []
+        last: Dict[int, Tuple[int, float]] = {}
+        for h in window.heartbeats:
+            if h.rank not in last or h.seq > last[h.rank][0]:
+                last[h.rank] = (h.seq, h.t)
+        seqs = np.array([last[r][0] for r in sorted(last)])
+        ranks = np.array(sorted(last))
+        med = np.median(seqs)
+        verdicts: List[Verdict] = []
+        for r, s in zip(ranks, seqs):
+            if med - s >= self.cfg.hang_grace:
+                # did the rank itself start any transport before stalling?
+                # yes -> it died inside the collective (communication hang);
+                # no  -> it never reached it (compute / data-loading hang)
+                had_transport = any(t.src_rank == r for t in window.transports)
+                syndrome = COMM_HANG if had_transport else NONCOMM_HANG
+                verdicts.append(Verdict(syndrome, rank=int(r),
+                                        score=float(med - s),
+                                        detail=f"seq {int(s)} vs median {med:.0f}"))
+        return verdicts
+
+
+class C4DDetector:
+    """Composite: the full analysis the C4D master runs per window."""
+
+    def __init__(self, cfg: DetectorConfig = DetectorConfig()):
+        self.cfg = cfg
+        self.delay = DelayMatrixDetector(cfg)
+        self.wait = RingWaitDetector(cfg)
+        self.hang = HangDetector(cfg)
+
+    def analyze(self, window: TelemetryWindow,
+                n_ranks: Optional[int] = None) -> List[Verdict]:
+        verdicts = self.hang.analyze(window)
+        if verdicts:
+            return verdicts  # hangs pre-empt slow analysis (job is stopped)
+        d = delay_matrix(window, n_ranks)
+        verdicts = self.delay.analyze(d)
+        verdicts += self.wait.analyze(window, n_ranks)
+        return verdicts

@@ -1,0 +1,139 @@
+"""Enhanced-CCL telemetry model (paper Fig. 5).
+
+The paper extends the bottom three layers of the collective communication
+library with monitoring:
+
+  communicator layer  -> communicator IDs, rank counts, rank assignments
+  operation layer     -> op type, algorithm, dtype, element count, durations
+  transport layer     -> connection specifics (QP), message counts/sizes/durations
+
+In the JAX adaptation these records are produced either by the cluster
+simulator (full transport fidelity, from the netsim) or by the trainer's
+host-side step hooks (step-level timings on real runs).  Records are plain
+dataclasses; the C4a agent batches them, the C4D master analyses them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CommunicatorInfo:
+    comm_id: int
+    n_ranks: int
+    ranks: Tuple[int, ...]        # global rank ids
+    kind: str = "dp"              # dp | tp | pp | ep
+
+
+@dataclass(frozen=True)
+class OpRecord:
+    """Operation layer: one collective operation on one rank."""
+    iteration: int
+    rank: int
+    comm_id: int
+    op_type: str                  # allreduce | allgather | reducescatter | ...
+    algorithm: str                # ring | tree
+    dtype: str
+    element_count: int
+    t_start: float                # seconds (simulated or host clock)
+    t_end: float
+    seq: int                      # per-rank monotonically increasing op counter
+
+    @property
+    def duration(self) -> float:
+        return self.t_end - self.t_start
+
+
+@dataclass(frozen=True)
+class TransportRecord:
+    """Transport layer: one message between two ranks.
+
+    ``t_post``  - receiver posted the buffer / sender notified (schedule)
+    ``t_start`` - first byte on the wire
+    ``t_end``   - completion
+    The receiver-driven wait (t_start - t_post) is the signal for
+    *non-communication* slowness (paper Case 2); the transfer duration
+    normalised by size is the signal for *communication* slowness (Case 1).
+    """
+    iteration: int
+    src_rank: int
+    dst_rank: int
+    msg_bytes: int
+    t_post: float
+    t_start: float
+    t_end: float
+    qp: int = 0
+
+    @property
+    def wait(self) -> float:
+        return self.t_start - self.t_post
+
+    @property
+    def transfer(self) -> float:
+        return max(self.t_end - self.t_start, 1e-9)
+
+    @property
+    def per_byte_latency(self) -> float:
+        return self.transfer / max(self.msg_bytes, 1)
+
+
+@dataclass(frozen=True)
+class Heartbeat:
+    rank: int
+    iteration: int
+    seq: int                      # last completed op sequence number
+    t: float
+
+
+@dataclass
+class TelemetryWindow:
+    """Everything the master sees for one monitoring window."""
+    window_id: int
+    comms: List[CommunicatorInfo] = field(default_factory=list)
+    ops: List[OpRecord] = field(default_factory=list)
+    transports: List[TransportRecord] = field(default_factory=list)
+    heartbeats: List[Heartbeat] = field(default_factory=list)
+    t_begin: float = 0.0
+    t_end: float = 0.0
+
+    def n_ranks(self) -> int:
+        m = 0
+        for c in self.comms:
+            m = max(m, max(c.ranks) + 1)
+        for t in self.transports:
+            m = max(m, t.src_rank + 1, t.dst_rank + 1)
+        for h in self.heartbeats:
+            m = max(m, h.rank + 1)
+        return m
+
+
+def delay_matrix(window: TelemetryWindow, n_ranks: Optional[int] = None,
+                 use_bandwidth: bool = False) -> np.ndarray:
+    """Fold transport records into the paper's Fig. 6 matrix.
+
+    D[src, dst] = median transfer latency (normalised per byte) between the
+    pair; NaN where no traffic was observed."""
+    n = n_ranks or window.n_ranks()
+    acc: Dict[Tuple[int, int], List[float]] = {}
+    for t in window.transports:
+        v = (t.msg_bytes / t.transfer) if use_bandwidth else t.per_byte_latency
+        acc.setdefault((t.src_rank, t.dst_rank), []).append(v)
+    d = np.full((n, n), np.nan)
+    for (s, r), vals in acc.items():
+        d[s, r] = float(np.median(vals))
+    return d
+
+
+def wait_matrix(window: TelemetryWindow, n_ranks: Optional[int] = None) -> np.ndarray:
+    """W[src, dst] = median receiver wait on the (src -> dst) edge."""
+    n = n_ranks or window.n_ranks()
+    acc: Dict[Tuple[int, int], List[float]] = {}
+    for t in window.transports:
+        acc.setdefault((t.src_rank, t.dst_rank), []).append(t.wait)
+    w = np.full((n, n), np.nan)
+    for (s, r), vals in acc.items():
+        w[s, r] = float(np.median(vals))
+    return w

@@ -1,0 +1,99 @@
+"""C4P dynamic load balancing (paper section 3.2, Figs. 11/12).
+
+"The CCL constantly evaluates message completion times on various paths and
+prioritizes the fastest for data transfer. If the optimal QP's queue is
+full, the next best is chosen."
+
+Fluid-model equivalent: each logical connection owns K QPs (distinct spine
+paths).  Every round the balancer observes per-QP throughput and shifts
+connection weight toward faster paths (multiplicative weights with a floor),
+re-routing QPs whose path died onto the healthiest remaining spine.
+Convergence: weights ~ path rates => per-QP completion times equalise, which
+is the max-min optimum for the connection.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.c4p.probing import LinkHealthMonitor
+from repro.core.netsim import Flow, RateResult, max_min_rates
+from repro.core.topology import ClosTopology
+
+
+@dataclass
+class LBConfig:
+    rounds: int = 12
+    step: float = 0.6            # weight shift aggressiveness
+    min_weight: float = 0.02
+    reroute_dead: bool = True
+
+
+class DynamicLoadBalancer:
+    def __init__(self, topo: ClosTopology, health: Optional[LinkHealthMonitor] = None,
+                 cfg: LBConfig = LBConfig()):
+        self.topo = topo
+        self.health = health or LinkHealthMonitor(topo)
+        self.cfg = cfg
+
+    def _reroute(self, flow: Flow) -> None:
+        """Move a dead-path QP onto the least-loaded healthy spine of the
+        same (port-affine) leaf pair."""
+        up = [l for l in flow.links if l[0] == "up"][0]
+        down = [l for l in flow.links if l[0] == "down"][0]
+        _, src_host, nic, src_port = up
+        _, dst_host, _, dst_port = down
+        src_leaf = self.topo.leaf_of(src_host, nic, src_port)
+        dst_leaf = self.topo.leaf_of(dst_host, nic, dst_port)
+        spines = self.health.usable_spines(src_leaf, dst_leaf)
+        if not spines:
+            return
+        spine = spines[0]
+        flow.links = self.topo.path_links(src_host, dst_host, nic,
+                                          src_port, dst_port, spine)
+
+    def balance(self, flows: Sequence[Flow], seed: int = 0,
+                cnp_jitter: float = 0.0,
+                trace: Optional[List[RateResult]] = None) -> RateResult:
+        """Iteratively re-weight QPs until completion times equalise."""
+        flows = list(flows)
+        res = max_min_rates(self.topo, flows, cnp_jitter=cnp_jitter, seed=seed)
+        for rnd in range(self.cfg.rounds):
+            # group by connection
+            by_conn: Dict[Tuple, List[Flow]] = {}
+            for f in flows:
+                by_conn.setdefault(f.conn_id, []).append(f)
+            changed = False
+            for conn, fl in by_conn.items():
+                if len(fl) < 2 and not self.cfg.reroute_dead:
+                    continue
+                rates = np.array([res.flow_rate.get(f.flow_id, 0.0) for f in fl])
+                for f, r in zip(fl, rates):
+                    if r <= 1e-9 and self.cfg.reroute_dead and \
+                            not all(self.topo.healthy(l) for l in f.links):
+                        self._reroute(f)
+                        changed = True
+                if len(fl) < 2:
+                    continue
+                total = rates.sum()
+                if total <= 1e-9:
+                    continue
+                w = np.array([f.weight for f in fl])
+                # target weights proportional to observed per-path rate
+                target = rates / total
+                new_w = (1 - self.cfg.step) * (w / w.sum()) + self.cfg.step * target
+                new_w = np.maximum(new_w, self.cfg.min_weight)
+                new_w = new_w / new_w.sum()
+                if np.max(np.abs(new_w - w / w.sum())) > 1e-3:
+                    changed = True
+                for f, nw in zip(fl, new_w):
+                    f.weight = float(nw)
+            res = max_min_rates(self.topo, flows, cnp_jitter=cnp_jitter,
+                                seed=seed + rnd + 1)
+            if trace is not None:
+                trace.append(res)
+            if not changed:
+                break
+        return res

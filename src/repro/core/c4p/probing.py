@@ -1,0 +1,83 @@
+"""C4P path probing and link-health monitoring (paper section 3.2).
+
+"C4P first isolates and discards malfunctioning links between leaf and
+spine switches, creating a healthy-link network. The C4P master performs
+full-mesh path probing via randomly selected servers per leaf switch,
+identifying and cataloging reliable paths."
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Set, Tuple
+
+import numpy as np
+
+from repro.core.topology import ClosTopology, LinkId
+
+
+@dataclass
+class ProbeReport:
+    healthy_paths: Set[Tuple[int, int, int]]     # (src_leaf, spine, dst_leaf)
+    faulty_links: Set[LinkId]
+    latencies_us: Dict[Tuple[int, int, int], float]
+
+
+class PathProber:
+    """Full-mesh leaf->spine->leaf probing. One representative endpoint per
+    leaf; a path is healthy iff both constituent links are healthy."""
+
+    def __init__(self, topo: ClosTopology, base_latency_us: float = 4.0,
+                 seed: int = 0):
+        self.topo = topo
+        self.base_latency_us = base_latency_us
+        self.rng = np.random.default_rng(seed)
+
+    def probe(self) -> ProbeReport:
+        topo = self.topo
+        healthy: Set[Tuple[int, int, int]] = set()
+        faulty: Set[LinkId] = set()
+        lat: Dict[Tuple[int, int, int], float] = {}
+        for src_leaf in range(topo.n_leaves):
+            for dst_leaf in range(topo.n_leaves):
+                if src_leaf == dst_leaf:
+                    continue
+                for spine in range(topo.n_spines):
+                    up, down = ("ls", src_leaf, spine), ("sl", spine, dst_leaf)
+                    if topo.healthy(up) and topo.healthy(down):
+                        healthy.add((src_leaf, spine, dst_leaf))
+                        lat[(src_leaf, spine, dst_leaf)] = float(
+                            self.base_latency_us * (1 + 0.05 * self.rng.random()))
+                    else:
+                        for l in (up, down):
+                            if not topo.healthy(l):
+                                faulty.add(l)
+        return ProbeReport(healthy, faulty, lat)
+
+
+class LinkHealthMonitor:
+    """Continuously folds probe results / transport errors into a blacklist,
+    'allowing it to identify and exclude faulty links from being considered
+    in future path allocations'."""
+
+    def __init__(self, topo: ClosTopology):
+        self.topo = topo
+        self.blacklist: Set[LinkId] = set()
+
+    def update_from_probe(self, report: ProbeReport) -> None:
+        self.blacklist |= report.faulty_links
+
+    def report_transport_error(self, link: LinkId) -> None:
+        self.blacklist.add(link)
+
+    def usable_spines(self, src_leaf: int, dst_leaf: int) -> List[int]:
+        out = []
+        for s in range(self.topo.n_spines):
+            if ("ls", src_leaf, s) in self.blacklist:
+                continue
+            if ("sl", s, dst_leaf) in self.blacklist:
+                continue
+            if not (self.topo.healthy(("ls", src_leaf, s))
+                    and self.topo.healthy(("sl", s, dst_leaf))):
+                continue
+            out.append(s)
+        return out

@@ -1,0 +1,165 @@
+"""Fault taxonomy, injection, and telemetry synthesis.
+
+Table 1 of the paper gives the production error mix (all surfacing to users
+as generic "NCCL Error"s) and how often each class is localisable:
+
+    CUDA Error          12.5%   localized 100%
+    ECC/NVLink Error    27.5%   localized 100%
+    NCCL timeout        20.0%   localized 75%
+    ACK timeout         27.5%   localized 81.8%
+    Network/Others      12.5%   localized 40%
+
+``RingJobTelemetry`` synthesises the enhanced-CCL telemetry of a healthy
+ring-allreduce job and injects fault signatures — this is what the C4D
+detectors consume, both in tests and inside the downtime simulation (the
+detection pipeline actually runs per error; it is not a constant).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.c4d.telemetry import (CommunicatorInfo, Heartbeat, OpRecord,
+                                      TelemetryWindow, TransportRecord)
+
+# ---------------------------------------------------------------------------
+# Taxonomy (Table 1)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ErrorClass:
+    name: str
+    probability: float
+    localization_rate: float      # fraction C4D can pin to a component
+    syndrome: str                 # dominant telemetry signature
+
+
+TABLE1 = [
+    ErrorClass("cuda_error",   0.125, 1.000, "crash"),
+    ErrorClass("ecc_nvlink",   0.275, 1.000, "crash"),
+    ErrorClass("nccl_timeout", 0.200, 0.750, "comm_hang"),
+    ErrorClass("ack_timeout",  0.275, 0.818, "comm_slow"),
+    ErrorClass("network_other",0.125, 0.400, "link_slow"),
+]
+
+
+def sample_error_class(rng: np.random.Generator) -> ErrorClass:
+    p = np.array([e.probability for e in TABLE1])
+    return TABLE1[int(rng.choice(len(TABLE1), p=p / p.sum()))]
+
+
+# ---------------------------------------------------------------------------
+# Injectable faults (telemetry-level signatures)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Fault:
+    kind: str                     # slow_src | slow_dst | slow_link | straggler |
+                                  # comm_hang | noncomm_hang | crash
+    rank: Optional[int] = None
+    link: Optional[Tuple[int, int]] = None
+    severity: float = 8.0         # latency multiplier / delay seconds
+
+
+class RingJobTelemetry:
+    """Synthetic enhanced-CCL telemetry of a BSP ring-allreduce job."""
+
+    def __init__(self, n_ranks: int, iters_per_window: int = 10,
+                 base_transfer_s: float = 0.010, base_wait_s: float = 0.0015,
+                 msg_bytes: int = 64 << 20, jitter: float = 0.04, seed: int = 0,
+                 channel_strides: Sequence[int] = (1, 3, 5, 7)):
+        # NCCL-style multi-channel rings: each channel is a different ring
+        # permutation (stride), so every rank talks to several distinct peers
+        # per window — this is what populates the Fig. 6 delay matrix beyond
+        # a single diagonal and makes row/column analysis meaningful.
+        self.n = n_ranks
+        self.iters = iters_per_window
+        self.base_transfer = base_transfer_s
+        self.base_wait = base_wait_s
+        self.msg_bytes = msg_bytes
+        self.jitter = jitter
+        self.rng = np.random.default_rng(seed)
+        self.channel_strides = [s for s in channel_strides
+                                if np.gcd(s, n_ranks) == 1] or [1]
+
+    def window(self, window_id: int = 0,
+               faults: Sequence[Fault] = ()) -> TelemetryWindow:
+        n = self.n
+        rng = self.rng
+        comm = CommunicatorInfo(comm_id=0, n_ranks=n, ranks=tuple(range(n)))
+        win = TelemetryWindow(window_id=window_id, comms=[comm])
+        hang_ranks = {f.rank for f in faults if f.kind in ("comm_hang", "crash")}
+        nc_hang_ranks = {f.rank for f in faults if f.kind == "noncomm_hang"}
+        slow_src = {f.rank: f.severity for f in faults if f.kind == "slow_src"}
+        slow_dst = {f.rank: f.severity for f in faults if f.kind == "slow_dst"}
+        slow_link = {f.link: f.severity for f in faults if f.kind == "slow_link"}
+        straggler = {f.rank: f.severity for f in faults if f.kind == "straggler"}
+
+        t = 0.0
+        op_period = self.base_transfer * 2.2
+        seq = {r: 0 for r in range(n)}
+        for it in range(self.iters):
+            for stride in self.channel_strides:
+                for r in range(n):
+                    dst = (r + stride) % n
+                    if r in hang_ranks or r in nc_hang_ranks:
+                        continue  # emits nothing this window after the hang point
+                    transfer = self.base_transfer * (1 + self.jitter * rng.standard_normal())
+                    transfer = abs(transfer) + 1e-6
+                    wait = abs(self.base_wait * (1 + self.jitter * rng.standard_normal()))
+                    if r in slow_src:
+                        transfer *= slow_src[r]
+                    if dst in slow_dst:
+                        transfer *= slow_dst[dst]
+                    if (r, dst) in slow_link:
+                        transfer *= slow_link[(r, dst)]
+                    if r in straggler:
+                        # sender late into the collective: receiver waits, link fine
+                        wait += self.base_transfer * straggler[r]
+                    t_post = t + it * op_period
+                    t_start = t_post + wait
+                    t_end = t_start + transfer
+                    win.transports.append(TransportRecord(
+                        iteration=it, src_rank=r, dst_rank=dst,
+                        msg_bytes=self.msg_bytes, t_post=t_post, t_start=t_start,
+                        t_end=t_end))
+                    win.ops.append(OpRecord(
+                        iteration=it, rank=r, comm_id=0, op_type="allreduce",
+                        algorithm="ring", dtype="bf16",
+                        element_count=self.msg_bytes // 2,
+                        t_start=t_post, t_end=t_end, seq=seq[r]))
+                    seq[r] += 1
+            for r in range(n):
+                if r in hang_ranks or r in nc_hang_ranks:
+                    continue
+                win.heartbeats.append(Heartbeat(rank=r, iteration=it,
+                                                seq=seq[r], t=(it + 1) * op_period))
+        # hung ranks: heartbeat frozen at an early seq (comm hang had started
+        # the collective; non-comm hang never reached it)
+        for r in hang_ranks:
+            win.heartbeats.append(Heartbeat(rank=r, iteration=0, seq=1, t=op_period))
+            win.transports.append(TransportRecord(
+                iteration=0, src_rank=r, dst_rank=(r + 1) % n,
+                msg_bytes=self.msg_bytes, t_post=0.0, t_start=self.base_wait,
+                t_end=self.base_wait + self.base_transfer))
+        for r in nc_hang_ranks:
+            win.heartbeats.append(Heartbeat(rank=r, iteration=0, seq=0, t=op_period))
+        win.t_begin, win.t_end = 0.0, self.iters * op_period
+        return win
+
+
+def fault_for_class(cls: ErrorClass, rank: int, n_ranks: int,
+                    rng: np.random.Generator) -> Fault:
+    """Instantiate a concrete telemetry fault for a Table-1 error class."""
+    if cls.syndrome == "crash":
+        return Fault("crash", rank=rank)
+    if cls.syndrome == "comm_hang":
+        return Fault("comm_hang", rank=rank)
+    if cls.syndrome == "comm_slow":
+        return Fault("slow_src", rank=rank, severity=float(rng.uniform(5, 15)))
+    # link_slow
+    return Fault("slow_link", link=(rank, (rank + 1) % n_ranks),
+                 severity=float(rng.uniform(5, 15)))

@@ -1,0 +1,65 @@
+"""Deterministic, seed-addressable synthetic data pipeline.
+
+Restart-reproducibility is the property the fault-tolerant trainer needs:
+``batch(step)`` is a pure function of (seed, step), implemented with a
+counter-based Philox generator, so a job restarted from checkpoint step k
+consumes the *exact* same stream from k+1 on — regardless of which hosts
+survived.  Per-host sharded loading is modelled by ``host_batch`` (each host
+materialises only its slice).
+
+For the modality-stub architectures the pipeline also emits precomputed
+frame/patch embeddings (musicgen / llama-vision), per the assignment spec.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.common.config import ModelConfig, ShapeSpec
+from repro.models.model import batch_shapes
+
+
+@dataclass
+class PipelineConfig:
+    seed: int = 0
+    n_hosts: int = 1
+
+
+class TokenPipeline:
+    """step -> batch dict of numpy arrays (tokens / labels / embeddings)."""
+
+    def __init__(self, model: ModelConfig, shape: ShapeSpec,
+                 cfg: PipelineConfig = PipelineConfig()):
+        self.model = model
+        self.shape = shape
+        self.cfg = cfg
+        self.spec = batch_shapes(model, shape)
+
+    def _rng(self, step: int, salt: int = 0) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.Philox(key=self.cfg.seed, counter=(step << 8) + salt))
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        out = {}
+        for i, (name, (shp, dt)) in enumerate(sorted(self.spec.items())):
+            rng = self._rng(step, salt=i)
+            if "int" in str(dt):
+                out[name] = rng.integers(
+                    0, self.model.vocab_size, size=shp).astype(np.int32)
+            else:
+                out[name] = rng.normal(0, 1, size=shp).astype(np.float32)
+        return out
+
+    def host_batch(self, step: int, host: int) -> Dict[str, np.ndarray]:
+        """The slice of the global batch that ``host`` loads (sharded I/O)."""
+        full = self.batch(step)
+        n = self.cfg.n_hosts
+        out = {}
+        for k, v in full.items():
+            b = v.shape[0]
+            assert b % n == 0, (k, b, n)
+            sl = b // n
+            out[k] = v[host * sl: (host + 1) * sl]
+        return out

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Standalone (no model-code dependencies) so they serve as independent ground
+truth: kernel tests sweep shapes/dtypes with ``interpret=True`` and
+``assert_allclose`` against these.  Dense O(S^2) formulations — test shapes
+are small.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def _causal_window_mask(q_pos, k_pos, window):
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        w = jnp.asarray(window)
+        m = jnp.logical_and(m, jnp.where(w > 0, k_pos[None, :] > q_pos[:, None] - w, True))
+    return m
+
+
+def flash_attention(q, k, v, *, window=None, logit_cap: float = 0.0, scale: float):
+    """Causal (optionally sliding-window / soft-capped) GQA attention.
+
+    q: (B,S,H,D); k,v: (B,Sk,Hkv,D) -> (B,S,H,Dv)."""
+    b, s, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, s, hkv, group, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logit_cap:
+        scores = jnp.tanh(scores / logit_cap) * logit_cap
+    mask = _causal_window_mask(jnp.arange(s), jnp.arange(sk), window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=None,
+                     logit_cap: float = 0.0, scale: float):
+    """One-token decode. q: (B,1,H,D); caches: (B,S,Hkv,D); pos scalar
+    (index of the current token; keys at positions > pos are masked)."""
+    b, _, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, 1, hkv, group, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    if logit_cap:
+        scores = jnp.tanh(scores / logit_cap) * logit_cap
+    k_pos = jnp.arange(s)
+    m = k_pos <= pos
+    if window is not None:
+        w = jnp.asarray(window)
+        m = jnp.logical_and(m, jnp.where(w > 0, k_pos > pos - w, True))
+    scores = jnp.where(m[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)

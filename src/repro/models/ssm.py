@@ -1,0 +1,419 @@
+"""State-space / recurrent blocks: Mamba2 (SSD, chunked) and xLSTM (mLSTM, sLSTM).
+
+Mamba2 uses the chunked SSD form (quadratic *within* a chunk, linear across
+chunks) — the TPU-friendly formulation: chunk einsums hit the MXU, the
+cross-chunk recurrence is a short ``lax.scan``.  mLSTM / sLSTM use a
+time-step ``lax.scan`` (sLSTM is inherently sequential; xlstm-125m is small).
+
+Each block exposes train / prefill / decode paths with explicit state caches.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, SSMConfig
+from repro.models.layers import apply_rmsnorm, truncated_normal
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray   # (B, W-1, conv_dim) trailing conv inputs
+    ssm: jnp.ndarray    # (B, H, P, N) state
+
+
+def _mamba_dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = s.num_heads or d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.state_dim
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, h, conv_dim = _mamba_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": truncated_normal(ks[0], (d, 2 * d_inner + 2 * s.state_dim + h),
+                                    d ** -0.5, dtype),
+        "conv_w": truncated_normal(ks[1], (s.conv_width, conv_dim), 0.1, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": {"scale": jnp.zeros((d_inner,), dtype)},
+        "out_proj": truncated_normal(ks[2], (d_inner, d), d_inner ** -0.5, dtype),
+    }
+
+
+def _causal_depthwise_conv(x, w, b, init_state=None):
+    """x: (B, L, C); w: (W, C) depthwise; left-causal. init_state: (B, W-1, C)."""
+    width = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+    return jax.nn.silu(out + b.astype(x.dtype)), xp[:, -(width - 1):] if width > 1 else init_state
+
+
+def _ssd_chunk_scan(xh, dt, a_log, Bm, Cm, s0, chunk: int):
+    """Chunked SSD.
+
+    xh: (B,L,H,P) inputs; dt: (B,L,H) softplus'd step sizes;
+    a_log: (B,L,H) per-step log decay (= dt * A, negative);
+    Bm/Cm: (B,L,N); s0: (B,H,P,N) initial state.
+    Returns y (B,L,H,P) and final state.
+    """
+    b, l, h, p = xh.shape
+    n = Bm.shape[-1]
+    q = min(chunk, l)
+    nc = (l + q - 1) // q
+    pad = nc * q - l
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(t):
+        return t.reshape((b, nc, q) + t.shape[2:]).swapaxes(0, 1)
+
+    xs, dts, als, bs, cs = map(to_chunks, (xh, dt, a_log, Bm, Cm))
+
+    def body(s, args):
+        xc, dtc, alc, bc, cc = args            # (B,q,...) per chunk
+        lc = jnp.cumsum(alc, axis=1)           # (B,q,H) inclusive cum log decay
+        # intra-chunk (j <= i): att[b,h,i,j] = exp(l_i - l_j) * (C_i . B_j) * dt_j
+        cb = jnp.einsum("bin,bjn->bij", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        decay = jnp.exp(lc[:, :, None, :] - lc[:, None, :, :])       # (B,i,j,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        att = cb[:, :, :, None] * decay * dtc[:, None, :, :]
+        att = jnp.where(mask[None, :, :, None], att, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att, xc.astype(jnp.float32))
+        # inter-chunk: y_i += exp(l_i) * C_i . s
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cc.astype(jnp.float32), s,
+                             jnp.exp(lc))
+        # state update: s' = exp(l_last) * s + sum_j exp(l_last - l_j) dt_j B_j x_j
+        w = jnp.exp(lc[:, -1:, :] - lc) * dtc                          # (B,q,H)
+        s_chunk = jnp.einsum("bjh,bjn,bjhp->bhpn", w, bc.astype(jnp.float32),
+                             xc.astype(jnp.float32))
+        s_new = jnp.exp(lc[:, -1])[:, :, None, None] * s + s_chunk
+        return s_new, y_intra + y_inter
+
+    from repro.common.scan_utils import scan as _scan
+    s_final, ys = _scan(body, s0.astype(jnp.float32), (xs, dts, als, bs, cs))
+    y = ys.swapaxes(0, 1).reshape(b, nc * q, h, p)[:, :l]
+    return y, s_final
+
+
+def mamba2_forward(p, cfg: ModelConfig, x, cache: MambaCache = None, pos=None):
+    """Full-sequence forward. Returns (out, new_cache or None)."""
+    s = cfg.ssm
+    d_inner, h, conv_dim = _mamba_dims(cfg)
+    b, l, _ = x.shape
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + conv_dim]
+    dt_raw = zxbcdt[..., -h:]
+    conv_init = cache.conv if cache is not None else None
+    xbc, conv_state = _causal_depthwise_conv(xbc, p["conv_w"], p["conv_b"], conv_init)
+    xin = xbc[..., :d_inner].reshape(b, l, h, s.head_dim)
+    Bm = xbc[..., d_inner : d_inner + s.state_dim]
+    Cm = xbc[..., d_inner + s.state_dim :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    a_log = dt * A                                          # (B,L,H)
+    s0 = (cache.ssm if cache is not None
+          else jnp.zeros((b, h, s.head_dim, s.state_dim), jnp.float32))
+    y, s_final = _ssd_chunk_scan(xin, dt, a_log, Bm, Cm, s0, s.chunk_size)
+    y = y + p["D"][None, None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(b, l, d_inner).astype(x.dtype)
+    y = apply_rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_cache = MambaCache(conv=conv_state.astype(x.dtype), ssm=s_final) if cache is not None else None
+    return out, new_cache
+
+
+def mamba2_decode(p, cfg: ModelConfig, x, cache: MambaCache):
+    """Single-token step. x: (B,1,D)."""
+    s = cfg.ssm
+    d_inner, h, conv_dim = _mamba_dims(cfg)
+    b = x.shape[0]
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(x.dtype)          # (B, ...)
+    z = zxbcdt[..., :d_inner]
+    xbc_t = zxbcdt[..., d_inner : d_inner + conv_dim]
+    dt_raw = zxbcdt[..., -h:]
+    # conv over cached window
+    window = jnp.concatenate([cache.conv.astype(x.dtype), xbc_t[:, None]], axis=1)  # (B,W,C)
+    w = p["conv_w"].astype(x.dtype)
+    xbc = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"].astype(x.dtype))
+    xin = xbc[..., :d_inner].reshape(b, h, s.head_dim)
+    Bm = xbc[..., d_inner : d_inner + s.state_dim]
+    Cm = xbc[..., d_inner + s.state_dim :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))                            # (B,H)
+    # s' = a s + dt * B (x) ; y = C . s' + D x
+    s_new = (a[:, :, None, None] * cache.ssm
+             + jnp.einsum("bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32),
+                          xin.astype(jnp.float32)))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), s_new)
+    y = y + p["D"][None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = apply_rmsnorm(p["norm"], y * jax.nn.silu(z[:, None]), cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, MambaCache(conv=window[:, 1:], ssm=s_new)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_inner, h, conv_dim = _mamba_dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, h, s.head_dim, s.state_dim), jnp.float32),
+    )
+
+
+# ===========================================================================
+# xLSTM — mLSTM (matrix memory)
+# ===========================================================================
+
+class MLSTMCache(NamedTuple):
+    C: jnp.ndarray  # (B, H, P, P) matrix memory
+    n: jnp.ndarray  # (B, H, P) normalizer
+    m: jnp.ndarray  # (B, H) stabilizer
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    h = cfg.n_heads
+    return d_inner, h, d_inner // h
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, h, p_dim = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up": truncated_normal(ks[0], (d, 2 * d_inner), d ** -0.5, dtype),
+        "wq": truncated_normal(ks[1], (d_inner, d_inner), d_inner ** -0.5, dtype),
+        "wk": truncated_normal(ks[2], (d_inner, d_inner), d_inner ** -0.5, dtype),
+        "wv": truncated_normal(ks[3], (d_inner, d_inner), d_inner ** -0.5, dtype),
+        "wif": truncated_normal(ks[4], (d_inner, 2 * h), d_inner ** -0.5, dtype),
+        "if_bias": jnp.zeros((2 * h,), jnp.float32),
+        "norm": {"scale": jnp.zeros((d_inner,), dtype)},
+        "down": truncated_normal(ks[5], (d_inner, d), d_inner ** -0.5, dtype),
+    }
+
+
+def _mlstm_step(state: MLSTMCache, q, k, v, i_raw, f_raw):
+    """One time step. q/k/v: (B,H,P); i_raw/f_raw: (B,H).
+
+    Stabilised exponential gating (official xLSTM convention): the stored
+    state is C~ = C * e^{-m}; h = C~ q / max(|n~ q|, e^{-m})."""
+    C, n, m = state
+    p_dim = q.shape[-1]
+    f_log = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(f_log + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    k_s = k / (p_dim ** 0.5)
+    C_new = f_g[..., None, None] * C + i_g[..., None, None] * jnp.einsum("bhp,bhq->bhpq", v, k_s)
+    n_new = f_g[..., None] * n + i_g[..., None] * k_s
+    num = jnp.einsum("bhpq,bhq->bhp", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n_new, q)),
+                      jnp.exp(-m_new))
+    h_t = num / den[..., None]
+    return MLSTMCache(C_new, n_new, m_new), h_t
+
+
+def _mlstm_chunk_scan(q, k, v, i_raw, f_raw, state: MLSTMCache, chunk: int):
+    """Chunkwise-parallel mLSTM (same pattern as the Mamba2 SSD scan):
+    quadratic attention within a chunk, state recurrence across chunks.
+    Avoids materialising the (B,H,P,P) matrix state per *timestep* — a
+    per-step scan would save ~40 MB x 4096 residuals for the backward pass.
+
+    q/k/v: (B,L,H,P) f32; i_raw/f_raw: (B,L,H) f32."""
+    b, l, h, p_dim = q.shape
+    qn = min(chunk, l)
+    nc = (l + qn - 1) // qn
+    pad = nc * qn - l
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded steps must be identity: no input (i = -inf) and no decay
+        # (f = +inf => log sigmoid f = 0), else the carried stabiliser m
+        # drifts by the pad count x log sigmoid(0)
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+        f_raw = jnp.pad(f_raw, ((0, 0), (0, pad), (0, 0)), constant_values=1e9)
+    k = k / (p_dim ** 0.5)
+
+    def to_chunks(t):
+        return t.reshape((b, nc, qn) + t.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, is_, fs = map(to_chunks, (q, k, v, i_raw, f_raw))
+
+    def body(st, args):
+        qc, kc, vc, ic, fc = args             # (B,q,...) one chunk
+        C, n, m0 = st
+        f_log = jax.nn.log_sigmoid(fc)        # (B,q,H)
+        ell = jnp.cumsum(f_log, axis=1)       # inclusive cum log decay
+        # log-weights: D[i,j] = ell_i - ell_j + i_j for j <= i
+        D = ell[:, :, None, :] - ell[:, None, :, :] + ic[:, None, :, :]
+        mask = jnp.tril(jnp.ones((qn, qn), bool))
+        D = jnp.where(mask[None, :, :, None], D, -jnp.inf)
+        # state path log-weight: g_i = ell_i + m0
+        g = ell + m0[:, None, :]              # (B,q,H)
+        m_i = jnp.maximum(jnp.max(D, axis=2), g)          # (B,q,H) stabiliser
+        w = jnp.exp(D - m_i[:, :, None, :])               # (B,i,j,H)
+        u = jnp.exp(g - m_i)                              # (B,q,H)
+        qk = jnp.einsum("bihp,bjhp->bijh", qc, kc)
+        s = w * qk                                        # weighted scores
+        num = jnp.einsum("bijh,bjhp->bihp", s, vc)
+        num = num + u[..., None] * jnp.einsum("bhpq,bihq->bihp", C, qc)
+        den_dot = jnp.einsum("bijh->bih", s) + u * jnp.einsum("bhp,bihp->bih", n, qc)
+        den = jnp.maximum(jnp.abs(den_dot), jnp.exp(-m_i))
+        y = num / den[..., None]
+        # ---- state update to chunk end ----
+        lq = ell[:, -1:, :]                               # (B,1,H)
+        m_state = jnp.maximum(lq[:, 0] + m0,              # carried state path
+                              jnp.max(lq - ell + ic, axis=1))
+        wS = jnp.exp(lq - ell + ic - m_state[:, None, :])  # (B,q,H)
+        C_new = (jnp.exp(lq[:, 0] + m0 - m_state)[:, :, None, None] * C
+                 + jnp.einsum("bjh,bjhp,bjhq->bhpq", wS, vc, kc))
+        n_new = (jnp.exp(lq[:, 0] + m0 - m_state)[:, :, None] * n
+                 + jnp.einsum("bjh,bjhp->bhp", wS, kc))
+        return MLSTMCache(C_new, n_new, m_state), y
+
+    state = MLSTMCache(state.C.astype(jnp.float32), state.n.astype(jnp.float32),
+                       state.m.astype(jnp.float32))
+    from repro.common.scan_utils import scan as _scan
+    state, ys = _scan(body, state, (qs, ks, vs, is_, fs))
+    y = ys.swapaxes(0, 1).reshape(b, nc * qn, h, p_dim)[:, :l]
+    return y, state
+
+
+def mlstm_forward(p, cfg: ModelConfig, x, cache: MLSTMCache = None,
+                  chunk: int = 256):
+    d_inner, h, p_dim = _mlstm_dims(cfg)
+    b, l, _ = x.shape
+    up = x @ p["up"].astype(x.dtype)
+    xi, z = up[..., :d_inner], up[..., d_inner:]
+    q = (xi @ p["wq"].astype(x.dtype)).reshape(b, l, h, p_dim).astype(jnp.float32)
+    k = (xi @ p["wk"].astype(x.dtype)).reshape(b, l, h, p_dim).astype(jnp.float32)
+    v = (xi @ p["wv"].astype(x.dtype)).reshape(b, l, h, p_dim).astype(jnp.float32)
+    if_raw = (xi @ p["wif"].astype(x.dtype)).astype(jnp.float32) + p["if_bias"]
+    i_raw, f_raw = if_raw[..., :h], if_raw[..., h:]
+    state = cache if cache is not None else init_mlstm_cache(cfg, b)
+
+    if l == 1:
+        # decode: single recurrent step
+        state, hs = _mlstm_step(state, q[:, 0], k[:, 0], v[:, 0],
+                                i_raw[:, 0], f_raw[:, 0])
+        hs = hs[:, None]
+    else:
+        hs, state = _mlstm_chunk_scan(q, k, v, i_raw, f_raw, state, chunk)
+    hs = hs.reshape(b, l, d_inner).astype(x.dtype)
+    hs = apply_rmsnorm(p["norm"], hs, cfg.norm_eps) * jax.nn.silu(z)
+    out = hs @ p["down"].astype(x.dtype)
+    return out, (state if cache is not None else None)
+
+
+def mlstm_decode(p, cfg: ModelConfig, x, cache: MLSTMCache):
+    out, state = mlstm_forward(p, cfg, x, cache)
+    return out, state
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    d_inner, h, p_dim = _mlstm_dims(cfg)
+    return MLSTMCache(
+        C=jnp.zeros((batch, h, p_dim, p_dim), jnp.float32),
+        n=jnp.zeros((batch, h, p_dim), jnp.float32),
+        m=jnp.full((batch, h), -1e9, jnp.float32),
+    )
+
+
+# ===========================================================================
+# xLSTM — sLSTM (scalar memory, block-diagonal recurrence)
+# ===========================================================================
+
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray  # (B, H, Dh)
+    n: jnp.ndarray  # (B, H, Dh)
+    h: jnp.ndarray  # (B, H, Dh)
+    m: jnp.ndarray  # (B, H, Dh)
+
+
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "w": truncated_normal(ks[0], (d, 4 * d), d ** -0.5, dtype),       # i,f,z,o
+        "r": truncated_normal(ks[1], (4, h, dh, dh), dh ** -0.5, dtype),  # recurrent, block-diag
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "norm": {"scale": jnp.zeros((d,), dtype)},
+        "out": truncated_normal(ks[2], (d, d), d ** -0.5, dtype),
+    }
+
+
+def _slstm_step(p_r, state: SLSTMCache, wx_t):
+    """wx_t: (B, 4, H, Dh) input projections for gates i,f,z,o."""
+    c, n, h_prev, m = state
+    rec = jnp.einsum("bhd,ghde->gbhe", h_prev, p_r)       # (4,B,H,Dh)
+    i_raw = wx_t[:, 0] + rec[0]
+    f_raw = wx_t[:, 1] + rec[1]
+    z_raw = wx_t[:, 2] + rec[2]
+    o_raw = wx_t[:, 3] + rec[3]
+    f_log = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(f_log + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    z = jnp.tanh(z_raw)
+    o = jax.nn.sigmoid(o_raw)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return SLSTMCache(c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(p, cfg: ModelConfig, x, cache: SLSTMCache = None):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    b, l, _ = x.shape
+    wx = (x @ p["w"].astype(x.dtype)).astype(jnp.float32) + p["b"]
+    wx = wx.reshape(b, l, 4, h, dh)
+    state = cache if cache is not None else init_slstm_cache(cfg, b)
+    p_r = p["r"].astype(jnp.float32)
+
+    def body(s, wx_t):
+        s2 = _slstm_step(p_r, s, wx_t)
+        return s2, s2.h
+
+    state, hs = jax.lax.scan(body, state, wx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).reshape(b, l, d).astype(x.dtype)
+    hs = apply_rmsnorm(p["norm"], hs, cfg.norm_eps)
+    return hs @ p["out"].astype(x.dtype), (state if cache is not None else None)
+
+
+def slstm_decode(p, cfg: ModelConfig, x, cache: SLSTMCache):
+    return slstm_forward(p, cfg, x, cache)
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    zeros = jnp.zeros((batch, h, dh), jnp.float32)
+    return SLSTMCache(c=zeros, n=zeros, h=zeros, m=jnp.full((batch, h, dh), -1e9, jnp.float32))

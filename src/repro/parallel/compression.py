@@ -1,0 +1,110 @@
+"""Gradient compression for the slow (cross-pod / DCN) axis.
+
+C4P's insight is that the cross-leaf fabric is the scarce resource; on a
+multi-pod TPU mesh the analogous scarce fabric is the cross-pod DCN.  This
+module implements an int8 ring all-reduce with error feedback:
+
+  * ``ring_allreduce_int8`` — a *manual* ring reduce-scatter + all-gather
+    built from ``lax.ppermute`` inside ``shard_map``, where every hop moves
+    int8 payloads (+ one f32 scale per chunk).  The wire format is 4x
+    smaller than bf16; accumulation is f32 with per-hop requantisation.
+  * ``ErrorFeedback`` — residual accumulation so the per-step quantisation
+    error is re-injected next step (Karimireddy et al.; keeps convergence).
+
+The HLO of the compiled train step shows collective-permute operands in s8,
+which is how the roofline's collective term measures the saving.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantisation. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def _ring_allreduce_int8_local(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Runs inside shard_map: bandwidth-optimal int8 ring allreduce over
+    ``axis_name``.  x: the local full gradient block (f32/bf16)."""
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    idx = jax.lax.axis_index(axis_name)
+    orig_shape, orig_dtype = x.shape, x.dtype
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % n
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n, -1)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    # ---- reduce-scatter: after n-1 hops, chunk (idx+1) holds the full sum
+    def rs_step(k, carry):
+        acc = carry                           # (n, chunk) f32 accumulators
+        send_idx = (idx - k) % n
+        q, s = quantize_int8(acc[send_idx])
+        q = jax.lax.ppermute(q, axis_name, perm)
+        s = jax.lax.ppermute(s, axis_name, perm)
+        recv_idx = (idx - k - 1) % n
+        acc = acc.at[recv_idx].add(dequantize_int8(q, s))
+        return acc
+
+    acc = jax.lax.fori_loop(0, n - 1, rs_step, chunks)
+    own = (idx + 1) % n                       # fully-reduced chunk index
+
+    # ---- all-gather (int8 wire): at step k every node forwards the chunk
+    # it completed most recently: send (idx+1-k), receive (idx-k)
+    def ag_step(k, carry):
+        out = carry
+        send_idx = (idx + 1 - k) % n
+        q, s = quantize_int8(out[send_idx])
+        q = jax.lax.ppermute(q, axis_name, perm)
+        s = jax.lax.ppermute(s, axis_name, perm)
+        recv_idx = (idx - k) % n
+        out = out.at[recv_idx].set(dequantize_int8(q, s))
+        return out
+
+    out = jax.lax.fori_loop(0, n - 1, ag_step, acc)
+    flat_out = out.reshape(-1)
+    if pad:
+        flat_out = flat_out[:-pad]
+    return flat_out.reshape(orig_shape).astype(orig_dtype)
+
+
+def ring_allreduce_int8(x: jnp.ndarray, mesh, axis_name: str) -> jnp.ndarray:
+    """shard_map wrapper: int8 ring allreduce of a replicated-along-axis
+    value (e.g. a gradient block already reduced within the pod)."""
+    fn = jax.shard_map(
+        functools.partial(_ring_allreduce_int8_local, axis_name=axis_name),
+        mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False)
+    return fn(x)
+
+
+class ErrorFeedback:
+    """Residual error feedback for lossy gradient compression."""
+
+    @staticmethod
+    def init(grads):
+        return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads, residual, compress_fn):
+        """g' = compress(g + r); r' = (g + r) - g'. Returns (g', r')."""
+        corrected = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
+                                 grads, residual)
+        compressed = jax.tree.map(compress_fn, corrected)
+        new_resid = jax.tree.map(lambda c, q: c - q.astype(jnp.float32),
+                                 corrected, compressed)
+        return compressed, new_resid

@@ -1,0 +1,6 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# NOTE: no XLA_FLAGS here by design — smoke tests and benches must see the
+# real single CPU device; only the dry-run forces 512 host devices.

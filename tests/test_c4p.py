@@ -1,0 +1,194 @@
+"""C4P traffic engineering: netsim invariants + the paper's Fig. 8/9/11 claims."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.c4p.master import C4PMaster, job_ring_requests
+from repro.core.c4p.pathalloc import PathAllocator, ConnRequest, ecmp_allocate
+from repro.core.c4p.probing import LinkHealthMonitor, PathProber
+from repro.core.netsim import Flow, max_min_rates, ring_allreduce_busbw
+from repro.core.topology import ClosTopology, paper_testbed
+
+
+# ---------------------------------------------------------------------------
+# max-min fairness properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def random_flows(draw):
+    topo = paper_testbed()
+    n = draw(st.integers(2, 24))
+    flows = []
+    for fid in range(n):
+        src = draw(st.integers(0, topo.n_hosts - 1))
+        dst = draw(st.integers(0, topo.n_hosts - 1).filter(lambda d: True))
+        if dst == src:
+            dst = (src + 1) % topo.n_hosts
+        nic = draw(st.integers(0, topo.nics_per_host - 1))
+        port = draw(st.integers(0, 1))
+        spine = draw(st.integers(0, topo.n_spines - 1))
+        src_leaf = topo.leaf_of(src, nic, port)
+        dst_leaf = topo.leaf_of(dst, nic, port)
+        links = topo.path_links(src, dst, nic, port, port,
+                                spine if src_leaf != dst_leaf else None)
+        w = draw(st.floats(0.1, 2.0))
+        flows.append(Flow(fid, 0, ("c", fid), links, weight=w))
+    return topo, flows
+
+
+@given(random_flows())
+@settings(max_examples=40, deadline=None)
+def test_maxmin_no_link_exceeds_capacity(tf):
+    topo, flows = tf
+    res = max_min_rates(topo, flows)
+    load = {}
+    for f in flows:
+        for l in f.links:
+            load[l] = load.get(l, 0.0) + res.flow_rate[f.flow_id]
+    for l, v in load.items():
+        assert v <= topo.link_capacity(l) * (1 + 1e-6), (l, v)
+
+
+@given(random_flows())
+@settings(max_examples=40, deadline=None)
+def test_maxmin_pareto_every_flow_bottlenecked(tf):
+    """Max-min optimality: every flow crosses at least one saturated link."""
+    topo, flows = tf
+    res = max_min_rates(topo, flows)
+    load = {}
+    for f in flows:
+        for l in f.links:
+            load[l] = load.get(l, 0.0) + res.flow_rate[f.flow_id]
+    for f in flows:
+        assert any(load[l] >= topo.link_capacity(l) * (1 - 1e-6)
+                   for l in f.links), f
+    # rates are non-negative
+    assert all(r >= 0 for r in res.flow_rate.values())
+
+
+def test_dead_link_flows_get_zero():
+    topo = paper_testbed()
+    links = topo.path_links(0, 8, 0, 0, 0, 0)
+    f = Flow(0, 0, ("c", 0), links, weight=0.5)
+    topo.fail_link(("ls", topo.leaf_of(0, 0, 0), 0))
+    res = max_min_rates(topo, [f])
+    assert res.flow_rate[0] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# allocation invariants
+# ---------------------------------------------------------------------------
+
+def test_c4p_port_affinity_and_spine_spread():
+    topo = paper_testbed()
+    alloc = PathAllocator(topo)
+    reqs = job_ring_requests(0, [0, 8], topo.nics_per_host)
+    flows = []
+    for r in reqs:
+        flows.extend(alloc.allocate(r, qps_per_port=1))
+    per_src_leaf = {}
+    for f in flows:
+        ups = [l for l in f.links if l[0] == "up"]
+        downs = [l for l in f.links if l[0] == "down"]
+        # port affinity: left -> left, right -> right
+        assert ups[0][3] == downs[0][3]
+        for l in f.links:
+            if l[0] == "ls":
+                per_src_leaf.setdefault(l[1], []).append(l[2])
+    # per source leaf, flows are balanced over spines: no spine carries two
+    # while another carries none ("distributed over all available spines")
+    for leaf, spines in per_src_leaf.items():
+        counts = [spines.count(s) for s in set(spines)]
+        n_used = len(set(spines))
+        assert max(counts) - min(counts) <= 1
+        assert n_used == min(len(spines), topo.n_spines)
+
+
+def test_c4p_avoids_blacklisted_links():
+    topo = paper_testbed()
+    topo.fail_link(("ls", 0, 3))
+    master = C4PMaster(topo, qps_per_port=1)
+    master.startup_probe()
+    st = master.register_job(0, [0, 8])
+    for f in st.flows:
+        assert ("ls", 0, 3) not in f.links
+
+
+def test_prober_finds_faulty_links():
+    topo = paper_testbed()
+    topo.fail_link(("ls", 2, 5))
+    topo.fail_link(("sl", 1, 6))
+    rep = PathProber(topo).probe()
+    assert ("ls", 2, 5) in rep.faulty_links
+    assert ("sl", 1, 6) in rep.faulty_links
+    assert all((l_, s, d) not in rep.healthy_paths
+               for (l_, s, d) in [(2, 5, 4), (0, 1, 6)])
+
+
+# ---------------------------------------------------------------------------
+# paper claims (directional)
+# ---------------------------------------------------------------------------
+
+def test_fig8_bonded_port_balance_gain():
+    """C4P's port-affine allocation beats ECMP's random dst-port hashing."""
+    topo = paper_testbed()
+    hosts = list(range(8))
+    reqs = job_ring_requests(0, hosts, topo.nics_per_host)
+    ecmp = np.mean([
+        ring_allreduce_busbw(topo, max_min_rates(
+            topo, ecmp_allocate(topo, reqs, seed=s)).conn_rate, 0, 8)
+        for s in range(5)])
+    m = C4PMaster(topo, qps_per_port=1)
+    m.startup_probe()
+    m.register_job(0, hosts)
+    c4p = m.job_busbw(m.evaluate(dynamic_lb=False, static_failover=False), 0)
+    assert c4p > ecmp * 1.4          # paper: ~+50%
+    assert c4p >= 350                # near the NVLink ceiling (362)
+
+
+def test_fig9_multijob_traffic_engineering():
+    topo = paper_testbed()
+    jobs = {j: [j, 8 + j] for j in range(8)}
+    all_ecmp = []
+    for j, hs in jobs.items():
+        all_ecmp += ecmp_allocate(topo, job_ring_requests(j, hs, 8), seed=7 + j)
+    for i, f in enumerate(all_ecmp):
+        f.flow_id = i
+    res_e = max_min_rates(topo, all_ecmp)
+    ecmp_avg = np.mean([ring_allreduce_busbw(topo, res_e.conn_rate, j, 2)
+                        for j in jobs])
+    m = C4PMaster(topo, qps_per_port=1)
+    m.startup_probe()
+    for j, hs in jobs.items():
+        m.register_job(j, hs)
+    res_c = m.evaluate(dynamic_lb=False, static_failover=False)
+    c4p_avg = np.mean([m.job_busbw(res_c, j) for j in jobs])
+    assert c4p_avg > ecmp_avg * 1.5   # paper: +70.3%
+
+
+def test_fig11_dynamic_lb_recovers_from_link_failure():
+    jobs = {j: [j, 8 + j] for j in range(8)}
+    results = {}
+    for mode, qps, dyn in (("static", 1, False), ("dynamic", 2, True)):
+        topo = paper_testbed()
+        m = C4PMaster(topo, qps_per_port=qps)
+        m.startup_probe()
+        for j, hs in jobs.items():
+            m.register_job(j, hs)
+        topo.fail_link(("ls", 0, 0))
+        res = m.evaluate(dynamic_lb=dyn, seed=3)
+        results[mode] = np.mean([m.job_busbw(res, j) for j in jobs])
+    ideal = 362.0 * 7 / 8
+    assert results["dynamic"] > results["static"]
+    assert results["dynamic"] >= ideal * 0.95   # near-ideal recovery
+
+
+def test_job_release_returns_load():
+    topo = paper_testbed()
+    m = C4PMaster(topo, qps_per_port=1)
+    m.register_job(0, [0, 8])
+    load_before = dict(m.allocator.projected_load)
+    m.register_job(1, [1, 9])
+    m.deregister_job(1)
+    for l, v in m.allocator.projected_load.items():
+        assert abs(v - load_before.get(l, 0.0)) < 1e-6

@@ -1,0 +1,209 @@
+"""Substrate layers: optimizer, checkpoint, data pipeline, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.common.config import ModelConfig, ShapeSpec
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.optim import adamw
+from repro.parallel.compression import (ErrorFeedback, dequantize_int8,
+                                        quantize_int8)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["adamw", "adamw_factored", "adamw_8bit"])
+def test_optimizer_minimises_quadratic(kind):
+    cfg = adamw.OptimizerConfig(kind=kind, weight_decay=0.0)
+    target = jnp.asarray(np.random.default_rng(0).normal(0, 1, (8, 16)), jnp.float32)
+    params = {"w": jnp.zeros((8, 16), jnp.float32)}
+    state = adamw.init_state(cfg, params)
+
+    def loss(p):
+        return jnp.mean(jnp.square(p["w"] - target))
+
+    l0 = float(loss(params))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = adamw.apply_updates(cfg, params, g, state, 0.05)
+    assert float(loss(params)) < l0 * 0.05, kind
+
+
+def test_factored_state_is_smaller():
+    params = {"w": jnp.zeros((128, 256), jnp.float32)}
+    full = adamw.init_state(adamw.OptimizerConfig(kind="adamw"), params)
+    fact = adamw.init_state(adamw.OptimizerConfig(kind="adamw_factored"), params)
+    def nbytes(t):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+    assert nbytes(fact) < nbytes(full) / 3
+
+
+def test_schedule_warmup_and_decay():
+    lr = [float(adamw.warmup_cosine(s, base_lr=1.0, warmup=10, total=100))
+          for s in range(101)]
+    assert abs(lr[0] - 0.1) < 1e-6 and abs(lr[9] - 1.0) < 1e-6
+    assert lr[100] < lr[50] < lr[11]
+    assert lr[100] >= 0.099  # min_ratio floor
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 10.0), "b": jnp.full((10,), -10.0)}
+    clipped, norm = adamw.clip_by_global_norm(tree, 1.0)
+    assert float(adamw.global_norm(clipped)) <= 1.0 + 1e-5
+    assert float(norm) > 1.0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manager
+# ---------------------------------------------------------------------------
+
+def _tree(step):
+    return {"params": {"w": np.full((4, 4), float(step))},
+            "step": np.asarray(step)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_disk=False)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree(s))
+    s, tree = mgr.restore(_tree(0))
+    assert s == 3 and float(tree["params"]["w"][0, 0]) == 3.0
+
+
+def test_checkpoint_skips_corrupt(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_disk=False)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    mgr.memory.clear()  # force disk path
+    # corrupt the newest
+    with open(os.path.join(str(tmp_path), "ckpt_00000002.npz"), "wb") as f:
+        f.write(b"garbage")
+    s, tree = mgr.restore(_tree(0))
+    assert s == 1
+
+
+def test_checkpoint_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_disk=False)
+    for s in range(1, 6):
+        mgr.save(s, _tree(s))
+    assert mgr.disk_steps() == [4, 5]
+    assert sorted(mgr.memory) == [4, 5]
+
+
+def test_checkpoint_async_flush(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_disk=True)
+    mgr.save(7, _tree(7))
+    mgr.wait()
+    assert 7 in mgr.disk_steps()
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+MC = ModelConfig(name="t", family="dense", n_layers=1, d_model=32, n_heads=2,
+                 n_kv_heads=2, d_ff=64, vocab_size=100)
+
+
+def test_pipeline_deterministic_random_access():
+    p1 = TokenPipeline(MC, ShapeSpec("t", 16, 8, "train"), PipelineConfig(seed=3))
+    p2 = TokenPipeline(MC, ShapeSpec("t", 16, 8, "train"), PipelineConfig(seed=3))
+    for step in (0, 5, 5, 100, 7):
+        np.testing.assert_array_equal(p1.batch(step)["tokens"],
+                                      p2.batch(step)["tokens"])
+    assert not np.array_equal(p1.batch(1)["tokens"], p1.batch(2)["tokens"])
+
+
+@given(st.integers(0, 1000), st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_pipeline_host_shards_partition_global(step, n_hosts):
+    p = TokenPipeline(MC, ShapeSpec("t", 16, 8, "train"),
+                      PipelineConfig(seed=1, n_hosts=n_hosts))
+    full = p.batch(step)["tokens"]
+    parts = [p.host_batch(step, h)["tokens"] for h in range(n_hosts)]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=0), full)
+
+
+def test_pipeline_tokens_in_vocab():
+    p = TokenPipeline(MC, ShapeSpec("t", 16, 8, "train"), PipelineConfig(seed=2))
+    t = p.batch(0)["tokens"]
+    assert t.min() >= 0 and t.max() < MC.vocab_size
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1), st.integers(4, 300))
+@settings(max_examples=30, deadline=None)
+def test_int8_quant_error_bound(seed, n):
+    x = jnp.asarray(np.random.default_rng(seed).normal(0, 3, (n,)), jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.max(np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x)))
+    assert err <= float(s) * 0.5 + 1e-6   # half-step rounding bound
+
+
+def test_error_feedback_identity():
+    """g' + r' == g + r exactly (residual captures the full quant error)."""
+    g = {"w": jnp.asarray([[0.1, -2.3, 0.7]], jnp.float32)}
+    r = ErrorFeedback.init(g)
+
+    def q(x):
+        qi, s = quantize_int8(x)
+        return dequantize_int8(qi, s)
+
+    comp, r2 = ErrorFeedback.apply(g, r, q)
+    np.testing.assert_allclose(np.asarray(comp["w"] + r2["w"]),
+                               np.asarray(g["w"] + r["w"]), rtol=1e-6)
+
+
+def test_error_feedback_unbiased_over_steps():
+    """Constant gradient: with EF the mean applied update converges to g."""
+    g = {"w": jnp.asarray([0.004, -0.011, 0.25], jnp.float32)}
+    r = ErrorFeedback.init(g)
+
+    def q(x):
+        qi, s = quantize_int8(x)
+        return dequantize_int8(qi, s)
+
+    acc = np.zeros(3)
+    for _ in range(64):
+        c, r = ErrorFeedback.apply(g, r, q)
+        acc += np.asarray(c["w"])
+    np.testing.assert_allclose(acc / 64, np.asarray(g["w"]), rtol=0.02, atol=1e-4)
+
+
+def test_int8_ring_allreduce_subprocess():
+    """The shard_map int8 ring needs >1 device: run in a subprocess with
+    forced host devices (conftest must NOT set XLA_FLAGS globally)."""
+    import subprocess, sys, textwrap
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import functools, jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.parallel.compression import _ring_allreduce_int8_local
+        mesh = jax.make_mesh((8,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (8, 33)), jnp.float32)
+        fn = jax.jit(jax.shard_map(
+            functools.partial(_ring_allreduce_int8_local, axis_name="pod"),
+            mesh=mesh, in_specs=P("pod"), out_specs=P("pod"), check_vma=False))
+        with jax.set_mesh(mesh):
+            out = np.asarray(fn(x))
+        want = np.tile(np.asarray(x).sum(0, keepdims=True), (8, 1))
+        err = np.max(np.abs(out - want)) / np.max(np.abs(want))
+        assert err < 0.05, err
+        print("RING_OK")
+    """)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "RING_OK" in res.stdout, res.stderr[-2000:]

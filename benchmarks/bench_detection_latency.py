@@ -24,17 +24,18 @@ def detect_once(cls, seed: int):
     return None, False
 
 
-def run() -> None:
+def run(quick: bool = False) -> None:
+    n_seeds = 3 if quick else 10
     for cls in TABLE1:
         us = timeit(lambda: detect_once(cls, 0), repeats=1)
         lat, acc = [], []
-        for s in range(10):
+        for s in range(n_seeds):
             l, ok = detect_once(cls, s)
             if l is not None:
                 lat.append(l)
                 acc.append(ok)
         emit(f"detection/{cls.name}", us, {
-            "detected": f"{len(lat)}/10",
+            "detected": f"{len(lat)}/{n_seeds}",
             "latency_s": f"{np.mean(lat):.0f}" if lat else "inf",
             "correct_node": f"{np.mean(acc):.2f}" if acc else "0",
             "baseline_latency_s": 1800 if cls.syndrome in ("comm_hang", "crash") else 1200,

@@ -32,10 +32,12 @@ def scenario(dynamic: bool, qps: int, seed: int = 0):
     # a conn gated by its slowest QP throttles its healthy-port flows too,
     # so effective flow rate = weight_share * conn_effective_rate
     eff_util = {}
-    for f in m.all_flows():
-        conn_fl = [g for g in m.all_flows() if g.conn_id == f.conn_id]
-        wsum = sum(g.weight for g in conn_fl)
-        eff = (f.weight / wsum) * post.conn_rate.get(f.conn_id, 0.0)
+    flows = m.all_flows()
+    conn_wsum = {}
+    for g in flows:
+        conn_wsum[g.conn_id] = conn_wsum.get(g.conn_id, 0.0) + g.weight
+    for f in flows:
+        eff = (f.weight / conn_wsum[f.conn_id]) * post.conn_rate.get(f.conn_id, 0.0)
         for l in f.links:
             if l[0] == "ls" and l[1] == 0:
                 eff_util[l] = eff_util.get(l, 0.0) + eff
@@ -43,7 +45,7 @@ def scenario(dynamic: bool, qps: int, seed: int = 0):
     return pre_bw, post_bw, util
 
 
-def run() -> None:
+def run(quick: bool = False) -> None:
     results = {}
     for mode, dyn, qps in (("static", False, 1), ("dynamic", True, 2)):
         us = timeit(lambda: scenario(dyn, qps), repeats=1)

@@ -28,12 +28,12 @@ JOBS = [
 ]
 
 
-def busbw_pair(n_hosts: int, seed: int = 0):
+def busbw_pair(n_hosts: int, seed: int = 0, n_seeds: int = 4):
     topo = paper_testbed()
     hosts = list(range(n_hosts))
     reqs = job_ring_requests(0, hosts, topo.nics_per_host)
     vals = []
-    for s in range(4):
+    for s in range(n_seeds):
         flows = ecmp_allocate(topo, reqs, seed=seed + s)
         vals.append(ring_allreduce_busbw(
             topo, max_min_rates(topo, flows).conn_rate, 0, n_hosts))
@@ -45,10 +45,11 @@ def busbw_pair(n_hosts: int, seed: int = 0):
     return ecmp, float(c4p)
 
 
-def run() -> None:
+def run(quick: bool = False) -> None:
+    n_seeds = 2 if quick else 4
     for name, params, dp_hosts, ga, comm_frac, paper_base, paper_gain in JOBS:
-        us = timeit(lambda: busbw_pair(dp_hosts), repeats=1)
-        bw_e, bw_c = busbw_pair(dp_hosts)
+        us = timeit(lambda: busbw_pair(dp_hosts, n_seeds=n_seeds), repeats=1)
+        bw_e, bw_c = busbw_pair(dp_hosts, n_seeds=n_seeds)
         grad_bytes = 2 * params / 8          # bf16 grads per TP-8 shard
         n_ranks = dp_hosts * 8
         t_comm_c = allreduce_time_s(grad_bytes, bw_c, n_ranks)

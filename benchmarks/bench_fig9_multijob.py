@@ -37,12 +37,12 @@ def scenario(oversub: float, cnp_jitter: float, seed: int = 0):
     return ecmp, c4p
 
 
-def run() -> None:
+def run(quick: bool = False) -> None:
     for oversub, jitter, tag, paper_gain in ((1.0, 0.0, "9a_1to1", 70.3),
                                              (2.0, 0.08, "9b_2to1", 65.5)):
         us = timeit(lambda: scenario(oversub, jitter), repeats=1)
         e_all, c_all = [], []
-        for s in range(5):
+        for s in range(2 if quick else 5):
             e, c = scenario(oversub, jitter, seed=10 * s)
             e_all += e
             c_all += c

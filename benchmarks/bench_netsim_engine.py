@@ -1,0 +1,85 @@
+"""Flow-simulation engine microbenchmark (docs/netsim.md perf table).
+
+Times the vectorized ``FlowSet`` engine against the scalar reference on the
+Fig. 2 1024-GPU scenario (64-host job + 32 background tenants on the
+128-host Clos, 2048 flows), plus the 12-round dynamic load balancer that
+reuses one factored FlowSet across rounds.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.c4p.loadbalance import DynamicLoadBalancer
+from repro.core.c4p.master import C4PMaster, job_ring_requests
+from repro.core.c4p.pathalloc import ecmp_allocate
+from repro.core.flowset import FlowSet
+from repro.core.netsim import max_min_rates, max_min_rates_reference
+from repro.core.topology import ClosTopology
+
+FABRIC = dict(n_hosts=128, n_leaf_pairs=16, n_spines=8, n_host_groups=16)
+
+
+def fig2_flows(topo: ClosTopology, n_hosts: int = 64, seed: int = 0):
+    """The Fig. 2 scenario: a strided n-host job + cross-group tenants."""
+    stride = max(topo.n_hosts // n_hosts, 1)
+    hosts = [(i * stride) % topo.n_hosts for i in range(n_hosts)]
+    free = sorted(set(range(topo.n_hosts)) - set(hosts))
+    flows = ecmp_allocate(topo, job_ring_requests(0, hosts, topo.nics_per_host),
+                          seed=seed)
+    half = len(free) // 2
+    for b in range(half):
+        flows += ecmp_allocate(topo, job_ring_requests(
+            100 + b, [free[b], free[b + half]], topo.nics_per_host),
+            seed=seed + 77 * b)
+    for i, f in enumerate(flows):
+        f.flow_id = i
+    return flows
+
+
+def run(quick: bool = False) -> None:
+    topo = ClosTopology(**FABRIC)
+    flows = fig2_flows(topo)
+
+    vec_us = timeit(lambda: max_min_rates(topo, flows),
+                    repeats=2 if quick else 5)
+    # the reference costs seconds per call: measure it once, unwarmed
+    t0 = time.perf_counter()
+    ref = max_min_rates_reference(topo, flows)
+    ref_us = (time.perf_counter() - t0) * 1e6
+    vec = max_min_rates(topo, flows)
+    drift = max(abs(ref.flow_rate[k] - vec.flow_rate[k]) for k in ref.flow_rate)
+    emit("netsim/max_min_2048flows", vec_us, {
+        "n_flows": len(flows),
+        "reference_us": f"{ref_us:.0f}",
+        "speedup_x": f"{ref_us / vec_us:.0f}",
+        "max_rate_drift_gbps": f"{drift:.2e}",
+    })
+
+    # amortised engine: FlowSet factored once, weights-only recompute
+    fs = FlowSet(topo, flows)
+    fs.max_min()
+    amort_us = timeit(lambda: fs.max_min(), repeats=2 if quick else 5)
+    emit("netsim/max_min_2048flows_refactored", amort_us, {
+        "n_flows": len(flows),
+        "speedup_vs_cold_x": f"{vec_us / amort_us:.1f}",
+    })
+
+    # 12-round dynamic LB end-to-end on a failed-link multi-job fabric
+    def lb_scenario():
+        t = ClosTopology(**FABRIC)
+        m = C4PMaster(t, qps_per_port=2)
+        m.startup_probe()
+        m.register_job(0, [(i * 2) % t.n_hosts for i in range(64)])
+        for b in range(4 if quick else 16):
+            m.register_job(100 + b, [65 + 2 * b, 66 + 2 * b])
+        t.fail_link(("ls", 0, 0))
+        return m.evaluate(dynamic_lb=True, seed=3)
+
+    lb_us = timeit(lambda: lb_scenario(), repeats=1 if quick else 3)
+    emit("netsim/dynamic_lb_12rounds", lb_us, {
+        "n_flows": 2048 + (4 if quick else 16) * 64,
+        "rounds": 12,
+    })

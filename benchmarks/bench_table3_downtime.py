@@ -12,12 +12,13 @@ from benchmarks.common import emit, timeit
 from repro.core.downtime import table3
 
 
-def run() -> None:
-    seeds = [0, 1, 2]
+def run(quick: bool = False) -> None:
+    seeds = [0] if quick else [0, 1, 2]
+    n_nodes = 120 if quick else 300
     rows = {"jun_2023_baseline": [], "dec_2023_c4d": []}
-    us = timeit(lambda: table3(seed=0, n_nodes=300), repeats=1)
+    us = timeit(lambda: table3(seed=0, n_nodes=n_nodes), repeats=1)
     for s in seeds:
-        for name, rep in table3(seed=s, n_nodes=300).items():
+        for name, rep in table3(seed=s, n_nodes=n_nodes).items():
             rows[name].append(rep)
     for name, reps in rows.items():
         fr = {k: float(np.mean([r.fractions()[k] for r in reps]))

@@ -1,6 +1,10 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig9]
+    PYTHONPATH=src python -m benchmarks.run [--only fig9] [--quick]
+
+``--quick`` shrinks every benchmark's seed/scenario grid (same code paths,
+fewer repeats) so the whole suite lands in about a minute — the mode the
+smoke script (scripts/perf_smoke.sh) uses for reproducible perf numbers.
 
 Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
 """
@@ -12,6 +16,7 @@ import sys
 import traceback
 
 BENCHES = [
+    ("netsim", "benchmarks.bench_netsim_engine"),
     ("table3", "benchmarks.bench_table3_downtime"),
     ("fig2", "benchmarks.bench_fig2_scalability"),
     ("fig8", "benchmarks.bench_fig8_bonded_ports"),
@@ -25,14 +30,19 @@ BENCHES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced repeats / scenario grid")
     args = ap.parse_args()
+    tags = [t for t, _ in BENCHES]
+    if args.only and args.only not in tags:
+        raise SystemExit(f"unknown benchmark tag {args.only!r}; choose from {tags}")
     print("name,us_per_call,derived")
     failed = []
     for tag, module in BENCHES:
         if args.only and args.only != tag:
             continue
         try:
-            importlib.import_module(module).run()
+            importlib.import_module(module).run(quick=args.quick)
         except Exception as e:
             failed.append(tag)
             print(f"{tag}/ERROR,0,{type(e).__name__}:{e}", flush=True)

@@ -62,20 +62,61 @@ def apply_variant(run, name: str):
     raise ValueError(name)
 
 
+def fabric_busbw(mode: str, n_hosts: int, seed: int = 0) -> float:
+    """Inter-host allreduce busbw (Gbps) from the vectorized C4 netsim
+    engine, for re-scaling the roofline's collective term to what a real
+    (shared, possibly degraded) fabric would deliver instead of the ideal
+    ICI number.  ``mode``: 'c4p' (traffic-engineered + dynamic LB) or
+    'ecmp' (hash-based baseline)."""
+    from repro.core.c4p.master import C4PMaster, job_ring_requests
+    from repro.core.c4p.pathalloc import ecmp_allocate
+    from repro.core.netsim import max_min_rates, ring_allreduce_busbw
+    from repro.core.topology import paper_testbed
+
+    topo = paper_testbed()
+    hosts = list(range(max(2, min(n_hosts, topo.n_hosts))))
+    if mode == "ecmp":
+        flows = ecmp_allocate(topo, job_ring_requests(0, hosts, topo.nics_per_host),
+                              seed=seed)
+        res = max_min_rates(topo, flows)
+        return ring_allreduce_busbw(topo, res.conn_rate, 0, len(hosts))
+    m = C4PMaster(topo, qps_per_port=2)
+    m.startup_probe()
+    m.register_job(0, hosts)
+    return m.job_busbw(m.evaluate(dynamic_lb=True, seed=seed), 0)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", required=True, help="arch:shape")
     ap.add_argument("--variants", default="baseline")
     ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--fabric", default="none", choices=["none", "c4p", "ecmp"],
+                    help="re-scale t_coll by netsim fabric busbw")
+    ap.add_argument("--fabric-hosts", type=int, default=16)
     args = ap.parse_args()
     arch, shape_name = args.cell.split(":")
     shape = SHAPES[shape_name]
+
+    fabric_bw = None
+    if args.fabric != "none":
+        # netsim-only: runs (and reports) before any jax lowering
+        fabric_bw = fabric_busbw(args.fabric, args.fabric_hosts)
+        print(f"[fabric:{args.fabric}] busbw = {fabric_bw:.1f} Gbps", flush=True)
+
     mesh = meshmod.make_production_mesh(multi_pod=False)
     os.makedirs(args.out, exist_ok=True)
 
     for vname in args.variants.split(","):
         run = apply_variant(get_config(arch), vname)
         rec = roofline_cell(run, shape, mesh, "single_pod_16x16", 256, arch)
+        if fabric_bw is not None:
+            # ideal-wire collective time, re-scaled to the netsim fabric
+            wire_ref = rec["t_coll_s"]
+            rec["fabric_mode"] = args.fabric
+            rec["fabric_busbw_gbps"] = fabric_bw
+            rec["t_coll_fabric_s"] = (
+                wire_ref * (meshmod.ICI_BW * 8 / 1e9) / max(fabric_bw, 1e-9))
         # memory check on the real (scan) lowering
         compiled = lower_cell(run, shape, mesh)
         ma = compiled.memory_analysis()

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# One-command reproducible perf numbers for the flow-simulation engine.
+#
+#   ./scripts/perf_smoke.sh          # engine microbench + quick paper suite
+#   ./scripts/perf_smoke.sh --full   # full benchmark grid
+#
+# Rows are CSV: name,us_per_call,derived (see benchmarks/common.py); the
+# netsim/* rows feed the perf table in docs/netsim.md.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--full" ]]; then
+    exec python -m benchmarks.run
+fi
+
+python -m benchmarks.run --quick --only netsim
+python -m benchmarks.run --quick

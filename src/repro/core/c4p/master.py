@@ -13,7 +13,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.c4p.loadbalance import DynamicLoadBalancer, LBConfig
 from repro.core.c4p.pathalloc import ConnRequest, PathAllocator, ecmp_allocate
 from repro.core.c4p.probing import LinkHealthMonitor, PathProber
-from repro.core.netsim import Flow, RateResult, max_min_rates, ring_allreduce_busbw
+from repro.core.flowset import FlowSet
+from repro.core.netsim import (Flow, RateResult, flowset_rate_result,
+                               ring_allreduce_busbw)
 from repro.core.topology import ClosTopology
 
 
@@ -53,6 +55,7 @@ class C4PMaster:
         self.balancer = DynamicLoadBalancer(topo, self.health, lb_cfg)
         self.qps_per_port = qps_per_port
         self.jobs: Dict[int, JobState] = {}
+        self._flowset: Optional[FlowSet] = None  # factored incidence cache
 
     # ---- control plane -----------------------------------------------------
     def startup_probe(self) -> None:
@@ -65,12 +68,14 @@ class C4PMaster:
             flows.extend(self.allocator.allocate(r, qps_per_port=self.qps_per_port))
         st = JobState(job_id, list(hosts), flows)
         self.jobs[job_id] = st
+        self._flowset = None
         return st
 
     def deregister_job(self, job_id: int) -> None:
         st = self.jobs.pop(job_id, None)
         if st:
             self.allocator.release_job(job_id, st.flows)
+            self._flowset = None
 
     # ---- data plane evaluation ----------------------------------------------
     def all_flows(self) -> List[Flow]:
@@ -79,16 +84,27 @@ class C4PMaster:
             out.extend(st.flows)
         return out
 
+    def flow_set(self) -> FlowSet:
+        """Factored FlowSet over all registered flows, kept across evaluate
+        calls (rebuilt when the job set changes; weights/paths are refreshed
+        from the Flow objects before each use)."""
+        if self._flowset is None:
+            self._flowset = FlowSet(self.topo, self.all_flows())
+        return self._flowset
+
     def evaluate(self, dynamic_lb: bool = True, cnp_jitter: float = 0.0,
                  seed: int = 0, static_failover: bool = True) -> RateResult:
         flows = self.all_flows()
         if dynamic_lb:
-            return self.balancer.balance(flows, seed=seed, cnp_jitter=cnp_jitter)
+            return self.balancer.balance(flows, seed=seed, cnp_jitter=cnp_jitter,
+                                         flow_set=self.flow_set())
         if static_failover:
             # without dynamic LB, dead paths are ECMP re-hashed (Fig. 11a)
             from repro.core.c4p.pathalloc import ecmp_failover
             ecmp_failover(self.topo, flows, seed=seed)
-        return max_min_rates(self.topo, flows, cnp_jitter=cnp_jitter, seed=seed)
+        fs = self.flow_set()
+        fs.refresh(flows)
+        return flowset_rate_result(fs, fs.max_min(cnp_jitter=cnp_jitter, seed=seed))
 
     def job_busbw(self, res: RateResult, job_id: int) -> float:
         st = self.jobs[job_id]

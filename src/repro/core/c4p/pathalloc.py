@@ -15,6 +15,13 @@ tie-breaking, subject to
       through the healthy spine set ordered by current projected load,
   (3) blacklisted links are never used.
 
+The allocator keeps *normalized* projected-load arrays for the leaf-spine
+tier (load / capacity, indexed [leaf, spine] and [spine, leaf]) alongside
+the public ``projected_load`` dict, so ranking candidate spines is two array
+gathers instead of re-deriving and re-scanning every candidate path.  Path
+link-lists themselves come from the topology's memoized ``path_links``
+table.
+
 ECMP baseline (`ecmp_allocate`) hashes (five-tuple, seed) to a random spine
 and random destination port — the collision-prone behaviour C4P replaces.
 """
@@ -49,14 +56,47 @@ class PathAllocator:
         self.health = health or LinkHealthMonitor(topo)
         self.projected_load: Dict[LinkId, float] = {}
         self._next_flow_id = 0
+        self._inv_cap: Dict[LinkId, float] = {}
+        self._ls_inv_cap = 1.0 / topo.leaf_spine_capacity()
+        # normalized (load/capacity) leaf-spine tier, for vectorized ranking
+        self._ls_norm = np.zeros((topo.n_leaves, topo.n_spines))
+        self._sl_norm = np.zeros((topo.n_spines, topo.n_leaves))
 
-    def _load(self, links: Sequence[LinkId]) -> float:
-        return max(self.projected_load.get(l, 0.0) / self.topo.link_capacity(l)
-                   for l in links)
+    def _inv(self, link: LinkId) -> float:
+        v = self._inv_cap.get(link)
+        if v is None:
+            v = self._inv_cap[link] = 1.0 / self.topo.link_capacity(link)
+        return v
 
     def _commit(self, links: Sequence[LinkId], demand: float) -> None:
+        pl = self.projected_load
         for l in links:
-            self.projected_load[l] = self.projected_load.get(l, 0.0) + demand
+            pl[l] = pl.get(l, 0.0) + demand
+            if l[0] == "ls":
+                self._ls_norm[l[1], l[2]] += demand * self._ls_inv_cap
+            elif l[0] == "sl":
+                self._sl_norm[l[1], l[2]] += demand * self._ls_inv_cap
+
+    def _uncommit(self, links: Sequence[LinkId], demand: float) -> None:
+        pl = self.projected_load
+        for l in links:
+            cur = pl.get(l)
+            if cur is None:
+                continue
+            dec = min(cur, demand)        # never drive below zero
+            new = cur - dec
+            if new <= 1e-9:
+                # prune: long multi-job sweeps must not grow the dict
+                del pl[l]
+                new = 0.0
+            else:
+                pl[l] = new
+            if l[0] == "ls":
+                self._ls_norm[l[1], l[2]] = max(
+                    self._ls_norm[l[1], l[2]] - dec * self._ls_inv_cap, 0.0)
+            elif l[0] == "sl":
+                self._sl_norm[l[1], l[2]] = max(
+                    self._sl_norm[l[1], l[2]] - dec * self._ls_inv_cap, 0.0)
 
     def allocate(self, req: ConnRequest, demand_gbps: float = 200.0,
                  qps_per_port: int = 1) -> List[Flow]:
@@ -65,25 +105,33 @@ class PathAllocator:
         Port affinity: src left -> dst left, src right -> dst right. Each
         port's traffic may be split over ``qps_per_port`` QPs on distinct
         spines (the units the dynamic load balancer later re-weights)."""
+        topo = self.topo
         flows: List[Flow] = []
         for port in (0, 1):
-            src_leaf = self.topo.leaf_of(req.src_host, req.nic, port)
-            dst_leaf = self.topo.leaf_of(req.dst_host, req.nic, port)
+            src_leaf = topo.leaf_of(req.src_host, req.nic, port)
+            dst_leaf = topo.leaf_of(req.dst_host, req.nic, port)
+            per_qp = demand_gbps / (2 * qps_per_port)
             if src_leaf == dst_leaf:
                 # same-leaf: switched directly at the leaf, no spine tier
-                candidates = [None]
+                cand = None
             else:
-                candidates = self.health.usable_spines(src_leaf, dst_leaf) or [None]
-            per_qp = demand_gbps / (2 * qps_per_port)
+                spines = self.health.usable_spines(src_leaf, dst_leaf)
+                cand = np.asarray(spines, dtype=np.int64) if spines else None
             for q in range(qps_per_port):
-                ranked = sorted(
-                    candidates,
-                    key=lambda s: (self._load(self.topo.path_links(
-                        req.src_host, req.dst_host, req.nic, port, port, s)),
-                        s if s is not None else -1))
-                s = ranked[0]
-                links = self.topo.path_links(req.src_host, req.dst_host,
-                                             req.nic, port, port, s)
+                if cand is None:
+                    s = None
+                else:
+                    up = ("up", req.src_host, req.nic, port)
+                    down = ("down", req.dst_host, req.nic, port)
+                    pl = self.projected_load
+                    base = max(pl.get(up, 0.0) * self._inv(up),
+                               pl.get(down, 0.0) * self._inv(down))
+                    score = np.maximum(
+                        np.maximum(self._ls_norm[src_leaf, cand],
+                                   self._sl_norm[cand, dst_leaf]), base)
+                    s = int(cand[np.lexsort((cand, score))[0]])
+                links = topo.path_links(req.src_host, req.dst_host,
+                                        req.nic, port, port, s)
                 self._commit(links, per_qp)
                 flows.append(Flow(self._next_flow_id, req.job_id,
                                   (req.job_id, req.edge, req.nic),
@@ -93,13 +141,12 @@ class PathAllocator:
         return flows
 
     def release_job(self, job_id: int, flows: Sequence[Flow]) -> None:
-        """Return a finished job's projected load to the pool."""
+        """Return a finished job's projected load to the pool; fully drained
+        links are pruned from ``projected_load``."""
         for f in flows:
             if f.job_id != job_id:
                 continue
-            for l in f.links:
-                self.projected_load[l] = max(
-                    self.projected_load.get(l, 0.0) - f.demand_gbps, 0.0)
+            self._uncommit(f.links, f.demand_gbps)
 
 
 def ecmp_failover(topo: ClosTopology, flows: Sequence[Flow], seed: int = 0) -> None:
@@ -110,8 +157,10 @@ def ecmp_failover(topo: ClosTopology, flows: Sequence[Flow], seed: int = 0) -> N
     for f in flows:
         if all(topo.healthy(l) for l in f.links):
             continue
-        up = [l for l in f.links if l[0] == "up"][0]
-        down = [l for l in f.links if l[0] == "down"][0]
+        up = next((l for l in f.links if l[0] == "up"), None)
+        down = next((l for l in f.links if l[0] == "down"), None)
+        if up is None or down is None:
+            continue  # leaf-local / degenerate path: nothing to re-hash
         _, src_host, nic, src_port = up
         _, dst_host, _, dst_port = down
         src_leaf = topo.leaf_of(src_host, nic, src_port)

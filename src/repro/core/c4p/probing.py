@@ -57,19 +57,32 @@ class PathProber:
 class LinkHealthMonitor:
     """Continuously folds probe results / transport errors into a blacklist,
     'allowing it to identify and exclude faulty links from being considered
-    in future path allocations'."""
+    in future path allocations'.
+
+    ``usable_spines`` is memoized per (src_leaf, dst_leaf) and invalidated
+    by version counters (blacklist edits here, fail/restore on the topology)
+    — the allocator calls it once per connection port, which at 1024-GPU
+    scale is tens of thousands of calls against a rarely-changing set."""
 
     def __init__(self, topo: ClosTopology):
         self.topo = topo
         self.blacklist: Set[LinkId] = set()
+        self._version = 0
+        self._spine_cache: Dict[Tuple[int, int], Tuple[Tuple[int, int], List[int]]] = {}
 
     def update_from_probe(self, report: ProbeReport) -> None:
         self.blacklist |= report.faulty_links
+        self._version += 1
 
     def report_transport_error(self, link: LinkId) -> None:
         self.blacklist.add(link)
+        self._version += 1
 
     def usable_spines(self, src_leaf: int, dst_leaf: int) -> List[int]:
+        ver = (self._version, self.topo._health_version)
+        hit = self._spine_cache.get((src_leaf, dst_leaf))
+        if hit is not None and hit[0] == ver:
+            return hit[1]
         out = []
         for s in range(self.topo.n_spines):
             if ("ls", src_leaf, s) in self.blacklist:
@@ -80,4 +93,5 @@ class LinkHealthMonitor:
                     and self.topo.healthy(("sl", s, dst_leaf))):
                 continue
             out.append(s)
+        self._spine_cache[(src_leaf, dst_leaf)] = (ver, out)
         return out

@@ -38,6 +38,12 @@ class ClosTopology:
 
     n_host_groups: int = 2             # hosts are split into leaf-pair groups
 
+    # memoized path table (paths don't depend on health) + a health version
+    # counter so health-derived caches (e.g. usable-spine sets) can
+    # invalidate cheaply without hashing the whole down_links set
+    _path_cache: dict = field(default_factory=dict, repr=False, compare=False)
+    _health_version: int = field(default=0, repr=False, compare=False)
+
     # ---- static structure -------------------------------------------------
     @property
     def n_leaves(self) -> int:
@@ -78,9 +84,11 @@ class ClosTopology:
     # ---- health -----------------------------------------------------------
     def fail_link(self, link: LinkId) -> None:
         self.down_links.add(link)
+        self._health_version += 1
 
     def restore_link(self, link: LinkId) -> None:
         self.down_links.discard(link)
+        self._health_version += 1
 
     def healthy(self, link: LinkId) -> bool:
         return link not in self.down_links
@@ -88,7 +96,19 @@ class ClosTopology:
     # ---- path construction -------------------------------------------------
     def path_links(self, src_host: int, dst_host: int, nic: int,
                    src_port: int, dst_port: int, spine: Optional[int]) -> List[LinkId]:
-        """Ordered links for one flow. Same-leaf flows skip the spine tier."""
+        """Ordered links for one flow. Same-leaf flows skip the spine tier.
+
+        Results are memoized (paths are pure topology, independent of link
+        health); callers must treat the returned list as immutable — swap
+        ``flow.links`` wholesale instead of mutating in place."""
+        key = (src_host, dst_host, nic, src_port, dst_port, spine)
+        hit = self._path_cache.get(key)
+        if hit is None:
+            hit = self._path_cache[key] = self._build_path(*key)
+        return hit
+
+    def _build_path(self, src_host: int, dst_host: int, nic: int,
+                    src_port: int, dst_port: int, spine: Optional[int]) -> List[LinkId]:
         src_leaf = self.leaf_of(src_host, nic, src_port)
         dst_leaf = self.leaf_of(dst_host, nic, dst_port)
         links: List[LinkId] = [("up", src_host, nic, src_port)]

@@ -1,0 +1,38 @@
+"""Degrade gracefully when ``hypothesis`` is not installed.
+
+Property-based tests use ``from _hypothesis_compat import given, settings,
+st`` instead of importing hypothesis directly.  With hypothesis available
+this is a pass-through; without it the decorators mark the test skipped at
+collection time (instead of killing the whole module — and with it every
+deterministic test — with a collection ImportError).
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Whatever:
+        """Stands in for any strategy object/factory; never executed."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _StrategiesStub:
+        def __getattr__(self, name):
+            return _Whatever()
+
+    st = _StrategiesStub()
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*a, **k):
+        def deco(fn):
+            return fn
+        return deco

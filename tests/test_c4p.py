@@ -1,7 +1,7 @@
 """C4P traffic engineering: netsim invariants + the paper's Fig. 8/9/11 claims."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.c4p.master import C4PMaster, job_ring_requests
 from repro.core.c4p.pathalloc import PathAllocator, ConnRequest, ecmp_allocate

@@ -1,0 +1,205 @@
+"""Vectorized flow-simulation engine: equivalence vs the scalar reference,
+incremental/structural invariants, and a wall-clock regression guard."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.c4p.loadbalance import DynamicLoadBalancer, LBConfig
+from repro.core.c4p.master import C4PMaster, job_ring_requests
+from repro.core.c4p.pathalloc import (ConnRequest, PathAllocator,
+                                      ecmp_allocate, ecmp_failover)
+from repro.core.flowset import FlowSet
+from repro.core.netsim import (Flow, max_min_rates, max_min_rates_reference)
+from repro.core.topology import ClosTopology, paper_testbed
+
+FABRIC_1024GPU = dict(n_hosts=128, n_leaf_pairs=16, n_spines=8, n_host_groups=16)
+
+
+def _random_scenario(rng, fail_links=False):
+    topo = ClosTopology(
+        n_hosts=int(rng.integers(4, 33)),
+        nics_per_host=int(rng.choice([2, 4, 8])),
+        n_leaf_pairs=int(rng.choice([2, 4])),
+        n_spines=int(rng.choice([2, 4, 8])),
+        n_host_groups=int(rng.choice([1, 2])),
+        oversubscription=float(rng.choice([1.0, 1.5, 2.0])))
+    n = int(rng.integers(2, 60))
+    flows = []
+    for fid in range(n):
+        src = int(rng.integers(0, topo.n_hosts))
+        dst = int(rng.integers(0, topo.n_hosts))
+        if dst == src:
+            dst = (src + 1) % topo.n_hosts
+        nic = int(rng.integers(0, topo.nics_per_host))
+        port = int(rng.integers(0, 2))
+        spine = int(rng.integers(0, topo.n_spines))
+        same_leaf = topo.leaf_of(src, nic, port) == topo.leaf_of(dst, nic, port)
+        # same-leaf flows sometimes hair-pin through a spine, sometimes not
+        s = (spine if rng.random() < 0.3 else None) if same_leaf else spine
+        links = topo.path_links(src, dst, nic, port, port, s)
+        conn = ("c", fid % max(1, n // 3))       # several QPs per connection
+        flows.append(Flow(fid, 0, conn, links,
+                          weight=float(rng.uniform(0.05, 2.0))))
+    if fail_links and rng.random() < 0.7:
+        for _ in range(int(rng.integers(1, 4))):
+            victim = flows[int(rng.integers(0, n))]
+            topo.fail_link(victim.links[int(rng.integers(0, len(victim.links)))])
+    return topo, flows
+
+
+def _assert_equivalent(ref, vec, tol=1e-6):
+    assert set(ref.flow_rate) == set(vec.flow_rate)
+    assert set(ref.conn_rate) == set(vec.conn_rate)
+    assert set(ref.link_util) == set(vec.link_util)
+    for k in ref.flow_rate:
+        assert abs(ref.flow_rate[k] - vec.flow_rate[k]) < tol, k
+    for k in ref.conn_rate:
+        assert abs(ref.conn_rate[k] - vec.conn_rate[k]) < tol, k
+    for k in ref.link_util:
+        assert abs(ref.link_util[k] - vec.link_util[k]) < tol, k
+
+
+def test_vectorized_matches_reference_randomized():
+    rng = np.random.default_rng(0)
+    for trial in range(40):
+        topo, flows = _random_scenario(rng, fail_links=True)
+        ref = max_min_rates_reference(topo, flows)
+        vec = max_min_rates(topo, flows)
+        _assert_equivalent(ref, vec)
+
+
+def test_vectorized_matches_reference_with_jitter():
+    """CNP jitter draws per-link rate caps; on a healthy fabric the link
+    interning order matches the reference's first-appearance order, so the
+    random caps — and therefore the rates — coincide."""
+    rng = np.random.default_rng(7)
+    for trial in range(10):
+        topo, flows = _random_scenario(rng, fail_links=False)
+        ref = max_min_rates_reference(topo, flows, cnp_jitter=0.1, seed=trial)
+        vec = max_min_rates(topo, flows, cnp_jitter=0.1, seed=trial)
+        _assert_equivalent(ref, vec)
+
+
+def test_vectorized_matches_reference_fig2_scenario():
+    topo, flows = _fig2_scenario()
+    ref = max_min_rates_reference(topo, flows)
+    vec = max_min_rates(topo, flows)
+    _assert_equivalent(ref, vec)
+
+
+def _fig2_scenario():
+    """64-host job + 32 cross-group background tenants on the 128-host
+    fabric: 2048 flows (the Fig. 2 1024-GPU sweep's unit of work)."""
+    topo = ClosTopology(**FABRIC_1024GPU)
+    hosts = [(i * 2) % topo.n_hosts for i in range(64)]
+    free = sorted(set(range(topo.n_hosts)) - set(hosts))
+    flows = ecmp_allocate(topo, job_ring_requests(0, hosts, topo.nics_per_host),
+                          seed=0)
+    half = len(free) // 2
+    for b in range(half):
+        flows += ecmp_allocate(topo, job_ring_requests(
+            100 + b, [free[b], free[b + half]], topo.nics_per_host),
+            seed=77 * b)
+    for i, f in enumerate(flows):
+        f.flow_id = i
+    return topo, flows
+
+
+def test_fig2_scenario_wall_clock_guard():
+    """Regression guard: the scalar reference costs ~2s here; the vectorized
+    engine runs in milliseconds.  The bound is generous (CI noise) but still
+    ~5x under the reference, so a fallback to scalar behaviour fails."""
+    topo, flows = _fig2_scenario()
+    assert len(flows) == 2048
+    max_min_rates(topo, flows)  # warmup (numpy import paths etc.)
+    t0 = time.perf_counter()
+    max_min_rates(topo, flows)
+    assert time.perf_counter() - t0 < 0.4
+
+    fs = FlowSet(topo, flows)
+    fs.max_min()
+    t0 = time.perf_counter()
+    fs.max_min()                # amortised: structure factored once
+    assert time.perf_counter() - t0 < 0.2
+
+
+def test_balance_12rounds_wall_clock_guard():
+    topo = paper_testbed()
+    m = C4PMaster(topo, qps_per_port=2)
+    m.startup_probe()
+    for j in range(8):
+        m.register_job(j, [j, 8 + j])
+    topo.fail_link(("ls", 0, 0))
+    m.evaluate(dynamic_lb=True, seed=3)  # warmup
+    t0 = time.perf_counter()
+    m.evaluate(dynamic_lb=True, seed=3)
+    assert time.perf_counter() - t0 < 0.25   # seed implementation: ~0.5s
+
+
+def test_flowset_refresh_tracks_weight_and_path_changes():
+    topo = paper_testbed()
+    flows = ecmp_allocate(topo, job_ring_requests(0, [0, 8], 8), seed=1)
+    fs = FlowSet(topo, flows)
+    base = fs.max_min().flow_rate.copy()
+    flows[0].weight = 7.0
+    flows[1].links = topo.path_links(0, 8, 0, 0, 0, 5)
+    fs.refresh(flows)
+    fresh = FlowSet(topo, flows).max_min()
+    got = fs.max_min()
+    np.testing.assert_allclose(got.flow_rate, fresh.flow_rate, atol=1e-9)
+    assert not np.allclose(got.flow_rate, base)
+
+
+def test_release_job_prunes_projected_load():
+    topo = paper_testbed()
+    alloc = PathAllocator(topo)
+    job_flows = {}
+    for j in range(4):
+        job_flows[j] = []
+        for r in job_ring_requests(j, [2 * j, 8 + 2 * j], topo.nics_per_host):
+            job_flows[j].extend(alloc.allocate(r, qps_per_port=2))
+    for j in range(4):
+        alloc.release_job(j, job_flows[j])
+    # fully drained: no stale zero entries left behind
+    assert alloc.projected_load == {}
+    assert float(np.abs(alloc._ls_norm).max()) < 1e-9
+    assert float(np.abs(alloc._sl_norm).max()) < 1e-9
+
+
+def test_ecmp_failover_skips_pathless_flows():
+    """Flows without an up/down hop (e.g. synthetic leaf-local paths) used
+    to raise IndexError; they must be skipped."""
+    topo = paper_testbed()
+    topo.fail_link(("ls", 0, 0))
+    weird = Flow(0, 0, ("c", 0), [("ls", 0, 0)], weight=1.0)
+    ecmp_failover(topo, [weird], seed=0)      # must not raise
+    assert weird.links == [("ls", 0, 0)]      # nothing to re-hash
+
+
+def test_reroute_leaves_leaf_local_flows_alone():
+    topo = paper_testbed()
+    # hosts 0 and 1 share every leaf (same host group): leaf-local path
+    links = topo.path_links(0, 1, 0, 0, 0, None)
+    assert all(l[0] in ("up", "down") for l in links)
+    f = Flow(0, 0, ("c", 0), links, weight=1.0)
+    topo.fail_link(links[0])
+    bal = DynamicLoadBalancer(topo, cfg=LBConfig(rounds=3))
+    res = bal.balance([f], seed=0)            # must not raise / hairpin
+    assert res.flow_rate[0] == 0.0
+    assert f.links == links
+
+
+def test_master_flowset_cache_consistent_across_job_churn():
+    topo = paper_testbed()
+    m = C4PMaster(topo, qps_per_port=1)
+    m.register_job(0, [0, 8])
+    r1 = m.evaluate(dynamic_lb=False, static_failover=False)
+    m.register_job(1, [1, 9])
+    r2 = m.evaluate(dynamic_lb=False, static_failover=False)
+    m.deregister_job(1)
+    r3 = m.evaluate(dynamic_lb=False, static_failover=False)
+    assert set(r3.flow_rate) == set(r1.flow_rate)
+    assert len(r2.flow_rate) > len(r1.flow_rate)
+    for k in r1.conn_rate:
+        assert abs(r1.conn_rate[k] - r3.conn_rate[k]) < 1e-6

@@ -7,7 +7,7 @@ import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.core.c4d.master import C4DMaster
-from repro.core.faults import TABLE1, Fault, RingJobTelemetry, fault_for_class
+from repro.core.faults import TABLE1, RingJobTelemetry, fault_for_class
 
 
 def detect_once(cls, seed: int):

@@ -10,7 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.c4p.master import C4PMaster, job_ring_requests
+from repro.core.c4p.master import C4PMaster
 from repro.core.topology import paper_testbed
 
 JOBS = {j: [j, 8 + j] for j in range(8)}

@@ -9,10 +9,8 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.c4p.loadbalance import DynamicLoadBalancer
 from repro.core.c4p.master import C4PMaster, job_ring_requests
 from repro.core.c4p.pathalloc import ecmp_allocate
 from repro.core.flowset import FlowSet

@@ -6,13 +6,18 @@ the paper-comparable quantity (a percentage, busbw, ratio ...) as
 """
 from __future__ import annotations
 
-import sys
 import time
-from typing import Callable, Dict
+from typing import Callable, Dict, List
+
+# every emit() lands here too, so the harness can dump the run as JSON
+# (benchmarks.run --json) for the CI perf artifact
+ROWS: List[Dict[str, object]] = []
 
 
 def emit(name: str, us_per_call: float, derived: Dict[str, object]) -> None:
     d = "|".join(f"{k}={v}" for k, v in derived.items())
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                 "derived": dict(derived)})
     print(f"{name},{us_per_call:.1f},{d}", flush=True)
 
 

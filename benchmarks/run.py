@@ -12,8 +12,11 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import sys
 import traceback
+
+from benchmarks import common
 
 BENCHES = [
     ("netsim", "benchmarks.bench_netsim_engine"),
@@ -32,6 +35,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true",
                     help="reduced repeats / scenario grid")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as JSON (CI perf artifact)")
     args = ap.parse_args()
     tags = [t for t, _ in BENCHES]
     if args.only and args.only not in tags:
@@ -47,6 +52,10 @@ def main() -> None:
             failed.append(tag)
             print(f"{tag}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"quick": args.quick, "failed": failed,
+                       "rows": common.ROWS}, f, indent=1, default=str)
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

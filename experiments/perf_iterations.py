@@ -15,13 +15,11 @@ import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np
 
 from repro.common.config import SHAPES
 from repro.configs import get_config
 from repro.launch import mesh as meshmod
-from repro.launch import roofline as rl
-from repro.launch.dryrun import full_units, lower_cell, roofline_cell, with_units
+from repro.launch.dryrun import lower_cell, roofline_cell
 
 
 def apply_variant(run, name: str):

@@ -4,7 +4,6 @@
 """
 import glob
 import json
-import os
 
 GiB = 2 ** 30
 

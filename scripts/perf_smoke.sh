@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # One-command reproducible perf numbers for the flow-simulation engine.
 #
-#   ./scripts/perf_smoke.sh          # engine microbench + quick paper suite
-#   ./scripts/perf_smoke.sh --full   # full benchmark grid
+#   ./scripts/perf_smoke.sh                    # engine microbench + quick paper suite
+#   ./scripts/perf_smoke.sh --full             # full benchmark grid
+#   ./scripts/perf_smoke.sh --json OUT.json    # quick suite, rows also as JSON (CI artifact)
 #
 # Rows are CSV: name,us_per_call,derived (see benchmarks/common.py); the
 # netsim/* rows feed the perf table in docs/netsim.md.
@@ -14,5 +15,10 @@ if [[ "${1:-}" == "--full" ]]; then
     exec python -m benchmarks.run
 fi
 
+json_args=()
+if [[ "${1:-}" == "--json" ]]; then
+    json_args=(--json "$2")
+fi
+
 python -m benchmarks.run --quick --only netsim
-python -m benchmarks.run --quick
+python -m benchmarks.run --quick "${json_args[@]+"${json_args[@]}"}"

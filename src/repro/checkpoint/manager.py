@@ -20,7 +20,6 @@ import json
 import os
 import queue
 import threading
-import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

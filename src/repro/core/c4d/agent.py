@@ -13,8 +13,7 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.c4d.telemetry import (Heartbeat, OpRecord, TelemetryWindow,
-                                      TransportRecord)
+from repro.core.c4d.telemetry import Heartbeat, TelemetryWindow, TransportRecord
 
 
 @dataclass

@@ -20,7 +20,7 @@ is homogeneous, so *any* deviation is a hardware symptom.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np

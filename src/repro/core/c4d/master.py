@@ -15,11 +15,10 @@ offline analysis accordingly".
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List
 
-from repro.core.c4d.agent import AgentReport, C4Agent, reports_to_window
-from repro.core.c4d.detector import (C4DDetector, DetectorConfig, Verdict,
-                                     COMM_HANG, NONCOMM_HANG)
+from repro.core.c4d.agent import C4Agent, reports_to_window
+from repro.core.c4d.detector import C4DDetector, Verdict, COMM_HANG, NONCOMM_HANG
 from repro.core.c4d.telemetry import TelemetryWindow
 
 

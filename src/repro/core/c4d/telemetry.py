@@ -15,7 +15,7 @@ dataclasses; the C4a agent batches them, the C4D master analyses them.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 

@@ -8,10 +8,10 @@ per cluster) in contrast to the per-job C4D master.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.c4p.loadbalance import DynamicLoadBalancer, LBConfig
-from repro.core.c4p.pathalloc import ConnRequest, PathAllocator, ecmp_allocate
+from repro.core.c4p.pathalloc import ConnRequest, PathAllocator
 from repro.core.c4p.probing import LinkHealthMonitor, PathProber
 from repro.core.flowset import FlowSet
 from repro.core.netsim import (Flow, RateResult, flowset_rate_result,

@@ -27,7 +27,7 @@ and random destination port — the collision-prone behaviour C4P replaces.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np

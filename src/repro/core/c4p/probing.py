@@ -7,7 +7,7 @@ identifying and cataloging reliable paths."
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Set, Tuple
 
 import numpy as np

@@ -8,9 +8,8 @@ that the C4D master requests.
 """
 from __future__ import annotations
 
-import enum
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 HEALTHY = "healthy"
 ISOLATED = "isolated"

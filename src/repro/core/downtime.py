@@ -19,15 +19,13 @@ isolation, post-checkpoint (lost work), re-initialisation.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict
 
 import numpy as np
 
-from repro.core.c4d.detector import C4DDetector
 from repro.core.c4d.master import C4DMaster
-from repro.core.cluster import SimCluster, SteeringCosts, SteeringService
-from repro.core.faults import (ErrorClass, Fault, RingJobTelemetry, TABLE1,
-                               fault_for_class, sample_error_class)
+from repro.core.cluster import SimCluster, SteeringService
+from repro.core.faults import ErrorClass, RingJobTelemetry, fault_for_class, sample_error_class
 
 HOURS = 3600.0
 DAYS = 24 * HOURS
@@ -105,7 +103,6 @@ class DowntimeSimulator:
         n_ranks = telemetry.n
         rank = int(rng.integers(0, n_ranks))
         fault = fault_for_class(cls, rank, n_ranks, rng)
-        hang = fault.kind in ("comm_hang", "crash", "noncomm_hang")
         # feed windows until the master acts (confirmation logic inside)
         latency = 0.0
         actions = []

@@ -15,9 +15,8 @@ Link identifiers are hashable tuples:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 LinkId = Tuple
 PathId = Tuple  # (src_port_side, spine or None, dst_port_side)

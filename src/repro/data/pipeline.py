@@ -13,7 +13,7 @@ frame/patch embeddings (musicgen / llama-vision), per the assignment spec.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

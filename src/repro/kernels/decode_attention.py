@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.common import jax_compat as jc
+
 NEG_INF = -2.3819763e38
 DEFAULT_BLOCK_K = 512
 
@@ -67,7 +69,8 @@ def _decode_kernel(scalar_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref
 
 def decode_attention_fwd(q, k_cache, v_cache, pos, *, window=None,
                          logit_cap: float = 0.0, scale: float,
-                         block_k: int = DEFAULT_BLOCK_K, interpret: bool = False):
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool | None = None):
     """q: (B,1,H,D); caches: (B,S,Hkv,D); pos scalar int32 -> (B,1,H,D)."""
     b, _, h, d = q.shape
     s, hkv = k_cache.shape[1], k_cache.shape[2]
@@ -99,9 +102,9 @@ def decode_attention_fwd(q, k_cache, v_cache, pos, *, window=None,
             pltpu.VMEM((group, 1), jnp.float32),
             pltpu.VMEM((group, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=jc.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=jc.resolve_interpret(interpret),
         name="decode_attention_fwd",
     )(scalars, qt, kt, vt)
 

@@ -19,12 +19,13 @@ TPU-native design (see DESIGN.md section 6):
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.common import jax_compat as jc
 
 NEG_INF = -2.3819763e38
 DEFAULT_BLOCK_Q = 256
@@ -87,7 +88,7 @@ def _flash_kernel(win_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 def flash_attention_fwd(q, k, v, *, window=None, logit_cap: float = 0.0,
                         scale: float, block_q: int = DEFAULT_BLOCK_Q,
                         block_k: int = DEFAULT_BLOCK_K, causal: bool = True,
-                        interpret: bool = False):
+                        interpret: bool | None = None):
     """q: (B,S,H,D); k,v: (B,S,Hkv,D) -> (B,S,H,D).
 
     S must be a multiple of the block sizes (the wrapper in ops.py pads).
@@ -126,9 +127,9 @@ def flash_attention_fwd(q, k, v, *, window=None, logit_cap: float = 0.0,
             pltpu.VMEM((group, block_q), jnp.float32),      # l
             pltpu.VMEM((group, block_q, d), jnp.float32),   # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=jc.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=jc.resolve_interpret(interpret),
         name="flash_attention_fwd",
     )(win, qt, kt, vt)
 

@@ -8,8 +8,10 @@ path:
     attention), which is what the CPU smoke tests and the 512-host-device
     dry-run compile.
 
-``REPRO_FORCE_INTERPRET=1`` forces the Pallas kernels in interpret mode
-(used by kernel tests to exercise the real kernel body on CPU).
+``REPRO_FORCE_INTERPRET=1`` forces the Pallas kernel path off-TPU (used by
+kernel tests to exercise the real kernel body on CPU); the kernels
+themselves resolve interpret mode via jax_compat.resolve_interpret, which
+interprets everywhere except a real TPU backend.
 """
 from __future__ import annotations
 
@@ -17,7 +19,6 @@ import os
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 
 def _on_tpu() -> bool:
@@ -41,7 +42,7 @@ def flash_attention(q, k, v, *, window=None, logit_cap: float = 0.0,
         if bq is not None:
             return flash_attention_fwd(
                 q, k, v, window=window, logit_cap=logit_cap, scale=scale,
-                block_q=bq, block_k=bk, interpret=_force_interpret())
+                block_q=bq, block_k=bk)
     from repro.models.attention import chunked_causal_attention
     return chunked_causal_attention(q, k, v, window=window, logit_cap=logit_cap,
                                     scale=scale, q_chunk=q_chunk)
@@ -57,7 +58,7 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None,
         if bk is not None:
             return decode_attention_fwd(
                 q, k_cache, v_cache, pos, window=window, logit_cap=logit_cap,
-                scale=scale, block_k=bk, interpret=_force_interpret())
+                scale=scale, block_k=bk)
     from repro.kernels import ref
     return ref.decode_attention(q, k_cache, v_cache, pos, window=window,
                                 logit_cap=logit_cap, scale=scale)
@@ -66,7 +67,7 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None,
 def rmsnorm(x, scale, eps: float = 1e-6, use_kernel: bool = True):
     if use_kernel and (_on_tpu() or _force_interpret()):
         from repro.kernels.rmsnorm import rmsnorm_fwd
-        return rmsnorm_fwd(x, scale, eps=eps, interpret=_force_interpret())
+        return rmsnorm_fwd(x, scale, eps=eps)
     from repro.kernels import ref
     return ref.rmsnorm(x, scale, eps=eps)
 

@@ -11,7 +11,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.common import jax_compat as jc
 
 DEFAULT_BLOCK_ROWS = 256
 
@@ -24,7 +25,7 @@ def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
 
 
 def rmsnorm_fwd(x, scale, eps: float = 1e-6, block_rows: int = DEFAULT_BLOCK_ROWS,
-                interpret: bool = False):
+                interpret: bool | None = None):
     """x: (..., D); scale: (D,). Rows are flattened and tiled."""
     orig_shape = x.shape
     d = x.shape[-1]
@@ -44,8 +45,8 @@ def rmsnorm_fwd(x, scale, eps: float = 1e-6, block_rows: int = DEFAULT_BLOCK_ROW
         ],
         out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
-        interpret=interpret,
+        compiler_params=jc.tpu_compiler_params(dimension_semantics=("parallel",)),
+        interpret=jc.resolve_interpret(interpret),
         name="rmsnorm_fwd",
     )(xf, scale)
     if pad:

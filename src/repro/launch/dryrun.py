@@ -20,17 +20,18 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import jax_compat as jc
 from repro.common.config import RunConfig, SHAPES, ShapeSpec, shape_applicable
 from repro.configs import ARCHS, get_config
 from repro.launch import mesh as meshmod
 from repro.launch import roofline as rl
-from repro.models.model import build_model, count_params_analytic, input_specs
+from repro.models.model import count_params_analytic, input_specs
 from repro.models.transformer import LM
 from repro.optim import adamw
 from repro.parallel import sharding as shd
@@ -122,7 +123,7 @@ def lower_cell(run: RunConfig, shape: ShapeSpec, mesh, *,
     attn_zero = (az == "on") or (az == "auto" and run.model.n_heads % tp != 0
                                  and run.model.mla is None)
     moe_zero = run.parallel.moe_weight_sharding == "zero"
-    with jax.set_mesh(mesh):
+    with jc.set_mesh(mesh):
         abstract_params = jax.eval_shape(model.init, jax.random.key(0))
         pspecs = shd.param_specs(abstract_params, mesh, attn_zero=attn_zero,
                                  moe_zero=moe_zero)
@@ -215,7 +216,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     try:
         compiled = lower_cell(run, shape, mesh)
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = jc.cost_analysis_dict(compiled)
         hlo_text = compiled.as_text()
         coll = rl.parse_collectives(hlo_text)
         peak = int(ma.argument_size_in_bytes + ma.temp_size_in_bytes

@@ -2,27 +2,29 @@
 
 A FUNCTION, not a module-level constant — importing this module never
 touches jax device state (the dry-run sets XLA_FLAGS before any jax init).
+Mesh construction goes through repro.common.jax_compat so the same code
+runs on every supported jax (axis_types exists only on newer releases).
 """
 from __future__ import annotations
 
-import jax
+from repro.common import jax_compat as jc
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jc.make_mesh(shape, axes,
+                        axis_types=(jc.AxisType.Auto,) * len(axes))
 
 
 def make_local_mesh(data: int = 1, model: int = 1, pod: int = 0):
     """Small mesh over however many devices exist (tests / smoke runs)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return jc.make_mesh((pod, data, model), ("pod", "data", "model"),
+                            axis_types=(jc.AxisType.Auto,) * 3)
+    return jc.make_mesh((data, model), ("data", "model"),
+                        axis_types=(jc.AxisType.Auto,) * 2)
 
 
 # TPU v5e hardware constants (roofline targets; this container is CPU-only)

@@ -22,11 +22,11 @@ shape and replica group size, folded with ring wire factors:
 """
 from __future__ import annotations
 
-import dataclasses
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
+from repro.common import jax_compat as jc
 from repro.launch import mesh as meshmod
 
 DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4,
@@ -108,7 +108,7 @@ class CostTerms:
 
     @staticmethod
     def of(compiled) -> "CostTerms":
-        ca = compiled.cost_analysis() or {}
+        ca = jc.cost_analysis_dict(compiled)
         return CostTerms(
             flops=float(ca.get("flops", 0.0)),
             hbm_bytes=float(ca.get("bytes accessed", 0.0)),

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import jax_compat as jc
 from repro.common.config import ShapeSpec
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.launch.mesh import make_local_mesh
@@ -36,7 +37,7 @@ def main():
     model = build_model(run, use_kernel=False)
     max_len = args.prompt_len + args.decode_steps
 
-    with jax.set_mesh(mesh):
+    with jc.set_mesh(mesh):
         params = jax.jit(model.init)(jax.random.key(0))
         shape = ShapeSpec("serve", args.prompt_len, args.batch, "prefill")
         batch = {k: jnp.asarray(v) for k, v in

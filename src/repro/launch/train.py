@@ -12,9 +12,7 @@ from __future__ import annotations
 import argparse
 import json
 import logging
-import os
 
-import jax
 
 from repro.common.config import SHAPES, ShapeSpec
 from repro.configs import ARCHS, get_config, get_smoke_config

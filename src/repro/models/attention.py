@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import MLAConfig, ModelConfig
-from repro.models.layers import apply_rope, init_dense, softcap, truncated_normal
+from repro.models.layers import apply_rope, softcap, truncated_normal
 
 NEG_INF = -2.3819763e38  # matches jnp.finfo(f32) order of magnitude w/o inf arithmetic
 

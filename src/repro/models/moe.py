@@ -150,7 +150,9 @@ def _maybe_shard(x, spec):
     ``spec`` entries may be axis names or tuples of axis names; entries for
     axes absent from the mesh or that do not divide the dim are dropped."""
     from jax.sharding import PartitionSpec as P
-    mesh = jax.sharding.get_abstract_mesh()
+
+    from repro.common import jax_compat as jc
+    mesh = jc.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     names = set(mesh.axis_names)

@@ -74,7 +74,6 @@ def _ssd_chunk_scan(xh, dt, a_log, Bm, Cm, s0, chunk: int):
     Returns y (B,L,H,P) and final state.
     """
     b, l, h, p = xh.shape
-    n = Bm.shape[-1]
     q = min(chunk, l)
     nc = (l + q - 1) // q
     pad = nc * q - l

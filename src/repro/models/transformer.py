@@ -19,7 +19,7 @@ Every block supports three modes: ``train`` (full sequence, no cache),
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,9 +11,8 @@ architectures so (params + grads + state) fits 16 GiB/chip HBM:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

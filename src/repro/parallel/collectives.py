@@ -16,19 +16,19 @@ roofline's collective parser), rather than left to GSPMD.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common import jax_compat as jc
 from repro.parallel.compression import _ring_allreduce_int8_local
 
 
 def _hier_allreduce_local(x, *, fast_axis: str, slow_axis: str,
                           compress_slow: bool):
     """Runs inside shard_map. x: the device-local (replicated) block."""
-    n_fast = jax.lax.axis_size(fast_axis)
+    n_fast = jc.axis_size(fast_axis)
     # 1) reduce-scatter over the fast axis: each fast-rank owns 1/n_fast
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % n_fast
@@ -55,12 +55,12 @@ def hierarchical_allreduce(tree, mesh, *, fast_axis: str = "data",
     fast_axis x slow_axis. Leaves untouched axes alone."""
     if slow_axis not in mesh.axis_names:
         # single pod: plain psum over the fast axis
-        fn = jax.shard_map(lambda t: jax.tree.map(
+        fn = jc.shard_map(lambda t: jc.tree_map(
             lambda a: jax.lax.psum(a, fast_axis), t),
             mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False)
         return fn(tree)
     local = functools.partial(_hier_allreduce_local, fast_axis=fast_axis,
                               slow_axis=slow_axis, compress_slow=compress_slow)
-    fn = jax.shard_map(lambda t: jax.tree.map(local, t),
-                       mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False)
+    fn = jc.shard_map(lambda t: jc.tree_map(local, t),
+                      mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False)
     return fn(tree)

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common import jax_compat as jc
+
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Symmetric per-tensor int8 quantisation. Returns (q, scale)."""
@@ -39,7 +41,7 @@ def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
 def _ring_allreduce_int8_local(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     """Runs inside shard_map: bandwidth-optimal int8 ring allreduce over
     ``axis_name``.  x: the local full gradient block (f32/bf16)."""
-    n = jax.lax.axis_size(axis_name)
+    n = jc.axis_size(axis_name)
     if n == 1:
         return x
     idx = jax.lax.axis_index(axis_name)
@@ -62,7 +64,7 @@ def _ring_allreduce_int8_local(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
         return acc
 
     acc = jax.lax.fori_loop(0, n - 1, rs_step, chunks)
-    own = (idx + 1) % n                       # fully-reduced chunk index
+    # chunk (idx + 1) % n now holds the full sum
 
     # ---- all-gather (int8 wire): at step k every node forwards the chunk
     # it completed most recently: send (idx+1-k), receive (idx-k)
@@ -86,7 +88,7 @@ def _ring_allreduce_int8_local(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
 def ring_allreduce_int8(x: jnp.ndarray, mesh, axis_name: str) -> jnp.ndarray:
     """shard_map wrapper: int8 ring allreduce of a replicated-along-axis
     value (e.g. a gradient block already reduced within the pod)."""
-    fn = jax.shard_map(
+    fn = jc.shard_map(
         functools.partial(_ring_allreduce_int8_local, axis_name=axis_name),
         mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False)
     return fn(x)

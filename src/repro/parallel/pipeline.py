@@ -13,12 +13,13 @@ two pods; this module provides the PP building block the framework needs at
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.common import jax_compat as jc
 
 
 def _pipeline_local(stage_params, microbatches, *, stage_fn: Callable,
@@ -29,7 +30,7 @@ def _pipeline_local(stage_params, microbatches, *, stage_fn: Callable,
     by shard_map).  microbatches: (n_micro, ...) — only stage 0 reads them.
     Returns (n_micro, ...) outputs — only the LAST stage's are valid.
     """
-    n_stages = jax.lax.axis_size(axis_name)
+    n_stages = jc.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     n_micro = microbatches.shape[0]
     ticks = n_micro + n_stages - 1
@@ -78,8 +79,7 @@ def pipeline_forward(stage_fn: Callable, stacked_params, microbatches, mesh,
         masked = jnp.where(idx == n_stages - 1, outs, jnp.zeros_like(outs))
         return jax.lax.psum(masked, axis_name)
 
-    other = tuple(a for a in mesh.axis_names if a != axis_name)
-    fn = jax.shard_map(
+    fn = jc.shard_map(
         local, mesh=mesh,
         in_specs=(P(axis_name), P()),
         out_specs=P(),

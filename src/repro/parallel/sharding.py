@@ -14,11 +14,13 @@ replication for that dim, which keeps all 10 architectures (4-head xlstm to
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common import jax_compat as jc
 
 LOGICAL_TO_MESH = {
     "fsdp": ("data",),
@@ -196,7 +198,7 @@ def param_specs(abstract_params, mesh: Mesh, fsdp_over_pod: bool = False,
 
 def param_shardings(abstract_params, mesh: Mesh, fsdp_over_pod: bool = False):
     specs = param_specs(abstract_params, mesh, fsdp_over_pod)
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+    return jc.tree_map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
 
 
@@ -250,5 +252,5 @@ def cache_specs(abstract_cache, mesh: Mesh):
 
 
 def to_shardings(spec_tree, mesh: Mesh):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+    return jc.tree_map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))

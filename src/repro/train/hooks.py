@@ -9,7 +9,7 @@ median/MAD rule as the C4D detectors, at step granularity.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional
 
 import numpy as np

@@ -11,13 +11,12 @@ dry-run) jit them with explicit in/out shardings.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
+from repro.common import jax_compat as jc
 from repro.common.config import RunConfig
 from repro.models.model import lm_loss
 from repro.optim import adamw
@@ -29,7 +28,7 @@ def _split_microbatches(batch: Dict[str, jnp.ndarray], k: int):
         b = x.shape[0]
         assert b % k == 0, (b, k)
         return x.reshape((k, b // k) + x.shape[1:])
-    return jax.tree.map(f, batch)
+    return jc.tree_map(f, batch)
 
 
 def make_loss_fn(model):
@@ -63,14 +62,14 @@ def make_train_step(model, run: RunConfig, opt_cfg: adamw.OptimizerConfig,
         def body(carry, one):
             acc, loss_acc = carry
             loss, metrics, g = grads_of(params, one)
-            acc = jax.tree.map(lambda a, b: a + b.astype(acc_dtype), acc, g)
+            acc = jc.tree_map(lambda a, b: a + b.astype(acc_dtype), acc, g)
             return (acc, loss_acc + loss), metrics
 
         from repro.common.scan_utils import scan as _scan
-        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+        zero = jc.tree_map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
         (gsum, loss_sum), metrics = _scan(body, (zero, 0.0), mb)
-        grads = jax.tree.map(lambda g: g / k, gsum)   # stays in acc_dtype
-        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        grads = jc.tree_map(lambda g: g / k, gsum)   # stays in acc_dtype
+        metrics = jc.tree_map(lambda m: m[-1], metrics)
         return loss_sum / k, metrics, grads
 
     def compress_grads(grads, opt_state):

@@ -14,17 +14,17 @@ Orchestrates:
 """
 from __future__ import annotations
 
-import dataclasses
 import logging
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.common import jax_compat as jc
 from repro.common.config import RunConfig, ShapeSpec
 from repro.core.c4d.master import C4DMaster
 from repro.core.cluster import SimCluster, SteeringService
@@ -71,9 +71,9 @@ class Trainer:
                  checkpoint_async: bool = True):
         self.run = run
         self.shape = shape
-        self.mesh = mesh or jax.make_mesh(
+        self.mesh = mesh or jc.make_mesh(
             (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            axis_types=(jc.AxisType.Auto,) * 2)
         self.model = build_model(run, use_kernel=use_kernel)
         self.opt_cfg = adamw.OptimizerConfig(
             kind=run.parallel.optimizer_state,
@@ -94,7 +94,7 @@ class Trainer:
     # ------------------------------------------------------------------
     def _build(self):
         run = self.run
-        with jax.set_mesh(self.mesh):
+        with jc.set_mesh(self.mesh):
             abstract = jax.eval_shape(self.model.init, jax.random.key(run.train.seed))
             self.param_sharding = shd.param_shardings(abstract, self.mesh)
             init = jax.jit(self.model.init, out_shardings=self.param_sharding)
@@ -105,11 +105,19 @@ class Trainer:
             batch_abs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
                          for k, v in self.pipeline.batch(0).items()}
             batch_specs = shd.batch_specs(batch_abs, self.mesh)
-            self._step_fn = jax.jit(
-                step_fn,
-                in_shardings=(self.param_sharding, None,
-                              shd.to_shardings(batch_specs, self.mesh)))
+            self._step_fn = self._jit_step(step_fn, batch_specs)
         self.step = 0
+
+    def _jit_step(self, step_fn, batch_specs):
+        # params must come back on their declared shardings: without
+        # out_shardings GSPMD may commit an output leaf to a different
+        # layout, and the next call rejects it against in_shardings
+        # (surfaces on any mesh bigger than 1x1).
+        return jax.jit(
+            step_fn,
+            in_shardings=(self.param_sharding, None,
+                          shd.to_shardings(batch_specs, self.mesh)),
+            out_shardings=(self.param_sharding, None, None))
 
     # ------------------------------------------------------------------
     def _save_checkpoint(self, blocking: bool = False):
@@ -121,7 +129,7 @@ class Trainer:
         template = {"params": self.params, "opt": self.opt_state,
                     "step": np.asarray(self.step)}
         s, tree = self.ckpt.restore(template)
-        with jax.set_mesh(self.mesh):
+        with jc.set_mesh(self.mesh):
             self.params = jax.tree.map(
                 lambda a, sh: jax.device_put(a, sh), tree["params"],
                 self.param_sharding)
@@ -165,15 +173,12 @@ class Trainer:
 
     def _build_after_restart(self):
         # re-jit against the (possibly new) device set
-        with jax.set_mesh(self.mesh):
+        with jc.set_mesh(self.mesh):
             step_fn = make_train_step(self.model, self.run, self.opt_cfg, self.mesh)
             batch_abs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
                          for k, v in self.pipeline.batch(0).items()}
             batch_specs = shd.batch_specs(batch_abs, self.mesh)
-            self._step_fn = jax.jit(
-                step_fn,
-                in_shardings=(self.param_sharding, None,
-                              shd.to_shardings(batch_specs, self.mesh)))
+            self._step_fn = self._jit_step(step_fn, batch_specs)
 
     # ------------------------------------------------------------------
     def train(self, n_steps: int,
@@ -191,11 +196,11 @@ class Trainer:
             batch = {k: jnp.asarray(v) for k, v in
                      self.pipeline.batch(self.step).items()}
             self.monitor.start()
-            with jax.set_mesh(self.mesh):
+            with jc.set_mesh(self.mesh):
                 self.params, self.opt_state, metrics = self._step_fn(
                     self.params, self.opt_state, batch)
                 loss = float(metrics["loss"])
-            stat = self.monitor.stop(self.step)
+            self.monitor.stop(self.step)
             self.report.losses.append(loss)
             self.report.steps_run += 1
             self.step += 1

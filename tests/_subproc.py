@@ -1,0 +1,24 @@
+"""Shared subprocess runner for multi-device tests.
+
+The main pytest process has a single CPU device (conftest sets no
+XLA_FLAGS by design), so anything needing >1 device forces host devices in
+a child process and asserts on its stdout.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_child(code: str) -> str:
+    """Run a multi-device snippet in a subprocess; on any failure surface the
+    child's stdout AND stderr (a bare `'OK' in ''` tells you nothing)."""
+    res = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, cwd=ROOT)
+    detail = (f"child exited rc={res.returncode}\n"
+              f"--- stdout ---\n{res.stdout[-2000:]}\n"
+              f"--- stderr ---\n{res.stderr[-4000:]}")
+    assert res.returncode == 0, detail
+    return res.stdout

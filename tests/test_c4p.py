@@ -1,13 +1,12 @@
 """C4P traffic engineering: netsim invariants + the paper's Fig. 8/9/11 claims."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.c4p.master import C4PMaster, job_ring_requests
-from repro.core.c4p.pathalloc import PathAllocator, ConnRequest, ecmp_allocate
-from repro.core.c4p.probing import LinkHealthMonitor, PathProber
+from repro.core.c4p.pathalloc import PathAllocator, ecmp_allocate
+from repro.core.c4p.probing import PathProber
 from repro.core.netsim import Flow, max_min_rates, ring_allreduce_busbw
-from repro.core.topology import ClosTopology, paper_testbed
+from repro.core.topology import paper_testbed
 
 
 # ---------------------------------------------------------------------------

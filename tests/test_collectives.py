@@ -1,40 +1,27 @@
 """Hierarchical pod-aware collectives (subprocess: needs >1 device)."""
-import os
-import subprocess
-import sys
-import textwrap
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run(code: str) -> str:
-    res = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, cwd=ROOT)
-    assert res.returncode == 0, res.stderr[-3000:]
-    return res.stdout
+from _subproc import run_child
 
 
 def test_hierarchical_allreduce_matches_psum():
-    out = _run("""
+    out = run_child("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import sys; sys.path.insert(0, "src")
-        import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P, NamedSharding
-        from repro.parallel.collectives import hierarchical_allreduce
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        import functools, jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.common import jax_compat as jc
+        from repro.parallel.collectives import _hier_allreduce_local
+        mesh = jc.make_mesh((2, 4), ("pod", "data"),
+                            axis_types=(jc.AxisType.Auto,) * 2)
         rng = np.random.default_rng(0)
         # one distinct block per device, laid out on (pod*data)
         x = jnp.asarray(rng.normal(0, 1, (8, 5, 7)), jnp.float32)
-        import functools
-        from repro.parallel.collectives import _hier_allreduce_local
-        fn = jax.jit(jax.shard_map(
+        fn = jax.jit(jc.shard_map(
             functools.partial(_hier_allreduce_local, fast_axis="data",
                               slow_axis="pod", compress_slow=False),
             mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")),
             check_vma=False))
-        with jax.set_mesh(mesh):
+        with jc.set_mesh(mesh):
             out = np.asarray(fn(x))
         want = np.tile(np.asarray(x).sum(0, keepdims=True), (8, 1, 1))
         np.testing.assert_allclose(out.reshape(8, -1), want.reshape(8, -1), rtol=1e-5)
@@ -44,23 +31,24 @@ def test_hierarchical_allreduce_matches_psum():
 
 
 def test_hierarchical_allreduce_int8_slow_axis():
-    out = _run("""
+    out = run_child("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import sys; sys.path.insert(0, "src")
         import functools, jax, jax.numpy as jnp, numpy as np, re
         from jax.sharding import PartitionSpec as P
+        from repro.common import jax_compat as jc
         from repro.parallel.collectives import _hier_allreduce_local
-        mesh = jax.make_mesh((4, 2), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jc.make_mesh((4, 2), ("pod", "data"),
+                            axis_types=(jc.AxisType.Auto,) * 2)
         rng = np.random.default_rng(1)
         x = jnp.asarray(rng.normal(0, 1, (8, 33)), jnp.float32)
-        fn = jax.jit(jax.shard_map(
+        fn = jax.jit(jc.shard_map(
             functools.partial(_hier_allreduce_local, fast_axis="data",
                               slow_axis="pod", compress_slow=True),
             mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")),
             check_vma=False))
-        with jax.set_mesh(mesh):
+        with jc.set_mesh(mesh):
             out = np.asarray(fn(x))
         want = np.tile(np.asarray(x).sum(0, keepdims=True), (8, 1))
         err = np.max(np.abs(out - want)) / np.max(np.abs(want))

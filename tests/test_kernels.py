@@ -1,5 +1,4 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
-import os
 
 import jax
 import jax.numpy as jnp

@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.common.config import (MLAConfig, ModelConfig, MoEConfig, RunConfig,
-                                 SSMConfig, ShapeSpec)
+from repro.common.config import MLAConfig, ModelConfig, MoEConfig, SSMConfig, ShapeSpec
 from repro.models.model import lm_loss, synthetic_batch
 from repro.models.transformer import LM
 

@@ -3,12 +3,10 @@ incremental/structural invariants, and a wall-clock regression guard."""
 import time
 
 import numpy as np
-import pytest
 
 from repro.core.c4p.loadbalance import DynamicLoadBalancer, LBConfig
 from repro.core.c4p.master import C4PMaster, job_ring_requests
-from repro.core.c4p.pathalloc import (ConnRequest, PathAllocator,
-                                      ecmp_allocate, ecmp_failover)
+from repro.core.c4p.pathalloc import PathAllocator, ecmp_allocate, ecmp_failover
 from repro.core.flowset import FlowSet
 from repro.core.netsim import (Flow, max_min_rates, max_min_rates_reference)
 from repro.core.topology import ClosTopology, paper_testbed

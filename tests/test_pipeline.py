@@ -1,22 +1,18 @@
 """GPipe pipeline over a mesh axis == sequential composition (subprocess)."""
-import os
-import subprocess
-import sys
-import textwrap
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from _subproc import run_child
 
 
 def test_pipeline_forward_matches_sequential():
-    code = textwrap.dedent("""
+    out = run_child("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import sys; sys.path.insert(0, "src")
         import jax, jax.numpy as jnp, numpy as np
+        from repro.common import jax_compat as jc
         from repro.parallel.pipeline import pipeline_forward
 
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jc.make_mesh((4,), ("pod",),
+                            axis_types=(jc.AxisType.Auto,))
         rng = np.random.default_rng(0)
         n_stages, n_micro, b, d = 4, 6, 2, 8
         ws = jnp.asarray(rng.normal(0, 0.5, (n_stages, d, d)), jnp.float32)
@@ -27,7 +23,7 @@ def test_pipeline_forward_matches_sequential():
             w, c = params
             return jnp.tanh(x @ w + c)
 
-        with jax.set_mesh(mesh):
+        with jc.set_mesh(mesh):
             out = np.asarray(jax.jit(
                 lambda p, m: pipeline_forward(stage_fn, p, m, mesh))((ws, bs), mbs))
 
@@ -43,6 +39,4 @@ def test_pipeline_forward_matches_sequential():
         np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
         print("PIPE_OK")
     """)
-    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, cwd=ROOT)
-    assert "PIPE_OK" in res.stdout, res.stderr[-3000:]
+    assert "PIPE_OK" in out

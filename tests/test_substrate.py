@@ -184,28 +184,25 @@ def test_error_feedback_unbiased_over_steps():
 def test_int8_ring_allreduce_subprocess():
     """The shard_map int8 ring needs >1 device: run in a subprocess with
     forced host devices (conftest must NOT set XLA_FLAGS globally)."""
-    import subprocess, sys, textwrap
-    if not hasattr(jax.sharding, "AxisType"):
-        pytest.skip("installed jax predates jax.sharding.AxisType")
-    code = textwrap.dedent("""
+    from _subproc import run_child
+    out = run_child("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import sys; sys.path.insert(0, "src")
         import functools, jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.common import jax_compat as jc
         from repro.parallel.compression import _ring_allreduce_int8_local
-        mesh = jax.make_mesh((8,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jc.make_mesh((8,), ("pod",), axis_types=(jc.AxisType.Auto,))
         x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (8, 33)), jnp.float32)
-        fn = jax.jit(jax.shard_map(
+        fn = jax.jit(jc.shard_map(
             functools.partial(_ring_allreduce_int8_local, axis_name="pod"),
             mesh=mesh, in_specs=P("pod"), out_specs=P("pod"), check_vma=False))
-        with jax.set_mesh(mesh):
+        with jc.set_mesh(mesh):
             out = np.asarray(fn(x))
         want = np.tile(np.asarray(x).sum(0, keepdims=True), (8, 1))
         err = np.max(np.abs(out - want)) / np.max(np.abs(want))
         assert err < 0.05, err
         print("RING_OK")
     """)
-    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, cwd=os.path.dirname(os.path.dirname(__file__)))
-    assert "RING_OK" in res.stdout, res.stderr[-2000:]
+    assert "RING_OK" in out

@@ -4,44 +4,33 @@ Static TE (paper Fig. 11a): affected QPs are ECMP re-hashed, no re-weighting
 -> degraded, imbalanced ports (Fig. 12a; paper avg 185.76 Gbps).
 Dynamic LB (Fig. 11b): C4P re-weights QP loads from observed completion
 times -> near the 7/8 ideal (paper avg 301.46 Gbps, ideal 315).
+
+Thin consumer of ``repro.scenarios.fabric.FabricState`` — the same fail ->
+re-evaluate sequence the ``cascading_spine_flaps`` scenario drives, minus
+the virtual clock and detection sweep.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.c4p.master import C4PMaster
-from repro.core.topology import paper_testbed
+from repro.scenarios.fabric import FabricState
 
 JOBS = {j: [j, 8 + j] for j in range(8)}
 DEAD = ("ls", 0, 0)
 
 
 def scenario(dynamic: bool, qps: int, seed: int = 0):
-    topo = paper_testbed()
-    m = C4PMaster(topo, qps_per_port=qps)
-    m.startup_probe()
+    fab = FabricState(mode="c4p", qps_per_port=qps)
     for j, hs in JOBS.items():
-        m.register_job(j, hs)
-    pre = m.evaluate(dynamic_lb=False, static_failover=False)
-    pre_bw = [m.job_busbw(pre, j) for j in JOBS]
-    topo.fail_link(DEAD)
-    post = m.evaluate(dynamic_lb=dynamic, seed=seed)
-    post_bw = [m.job_busbw(post, j) for j in JOBS]
-    # Fig.12: EFFECTIVE per-port leaf-0 uplink utilisation after failure —
-    # a conn gated by its slowest QP throttles its healthy-port flows too,
-    # so effective flow rate = weight_share * conn_effective_rate
-    eff_util = {}
-    flows = m.all_flows()
-    conn_wsum = {}
-    for g in flows:
-        conn_wsum[g.conn_id] = conn_wsum.get(g.conn_id, 0.0) + g.weight
-    for f in flows:
-        eff = (f.weight / conn_wsum[f.conn_id]) * post.conn_rate.get(f.conn_id, 0.0)
-        for l in f.links:
-            if l[0] == "ls" and l[1] == 0:
-                eff_util[l] = eff_util.get(l, 0.0) + eff
-    util = list(eff_util.values()) or [0.0]
+        fab.add_job(j, hs)
+    pre = fab.evaluate(dynamic_lb=False, static_failover=False)
+    pre_bw = [fab.job_busbw(pre, j) for j in JOBS]
+    fab.fail_link(DEAD)
+    post = fab.evaluate(dynamic_lb=dynamic, seed=seed)
+    post_bw = [fab.job_busbw(post, j) for j in JOBS]
+    # Fig.12: effective per-port leaf-0 uplink utilisation after failure
+    util = list(fab.leaf_uplink_utilisation(post, leaf=0).values()) or [0.0]
     return pre_bw, post_bw, util
 
 

@@ -7,6 +7,10 @@ TP8+DP16) and Job2 (Llama-7B, ZeRO-DP) spend >30% of the iteration in
 communication; Job3 (GPT-175B, TP8/PP8) accumulates gradients over GA=16
 microbatches, so its relative comm cost is ~16x smaller.
 
+The ECMP/C4P busbw pair comes from ``repro.scenarios.fabric.FabricState``
+(the same arms the A/B scenarios run); this module only owns the
+iteration-time model.
+
 Paper: Job1 +15.95% (74.82 -> 86.76 samples/s), Job2 +14.1%
 (156.59 -> 178.65), Job3 ~ no change.
 """
@@ -15,10 +19,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.c4p.master import C4PMaster, job_ring_requests
-from repro.core.c4p.pathalloc import ecmp_allocate
-from repro.core.netsim import allreduce_time_s, max_min_rates, ring_allreduce_busbw
+from repro.core.netsim import allreduce_time_s
 from repro.core.topology import paper_testbed
+from repro.scenarios.fabric import FabricState
 
 # (name, params_B, dp_hosts, grad_accum, comm_fraction_at_c4p, paper_base, paper_gain)
 JOBS = [
@@ -29,19 +32,16 @@ JOBS = [
 
 
 def busbw_pair(n_hosts: int, seed: int = 0, n_seeds: int = 4):
-    topo = paper_testbed()
     hosts = list(range(n_hosts))
-    reqs = job_ring_requests(0, hosts, topo.nics_per_host)
     vals = []
     for s in range(n_seeds):
-        flows = ecmp_allocate(topo, reqs, seed=seed + s)
-        vals.append(ring_allreduce_busbw(
-            topo, max_min_rates(topo, flows).conn_rate, 0, n_hosts))
+        fab = FabricState(paper_testbed(), mode="ecmp", seed=seed + s)
+        fab.add_job(0, hosts)
+        vals.append(fab.job_busbw(fab.evaluate(seed=0), 0))
     ecmp = float(np.mean(vals))
-    m = C4PMaster(topo, qps_per_port=1)
-    m.startup_probe()
-    m.register_job(0, hosts)
-    c4p = m.job_busbw(m.evaluate(dynamic_lb=False, static_failover=False), 0)
+    fab = FabricState(paper_testbed(), mode="c4p", qps_per_port=1)
+    fab.add_job(0, hosts)
+    c4p = fab.job_busbw(fab.evaluate(dynamic_lb=False, static_failover=False), 0)
     return ecmp, float(c4p)
 
 

@@ -1,6 +1,11 @@
 """Paper Fig. 9: 8 concurrent 2-server allreduce jobs crossing the spines,
 ECMP vs C4P global traffic engineering, at 1:1 and 2:1 oversubscription.
 
+Thin consumer of the scenario engine's fabric layer
+(``repro.scenarios.fabric.FabricState``): both arms build the identical job
+mix through it, so this benchmark and the ``multijob_contention`` /
+``ecmp_vs_c4p_ab`` scenarios exercise one code path.
+
 Paper: 1:1 — ECMP 171.9..263.3 Gbps, C4P 353.9..360.6 (+70.3% aggregate);
 2:1 — +65.5% aggregate, small residual variance from CNP throttling.
 """
@@ -9,32 +14,26 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.c4p.master import C4PMaster, job_ring_requests
-from repro.core.c4p.pathalloc import ecmp_allocate
-from repro.core.netsim import max_min_rates, ring_allreduce_busbw
 from repro.core.topology import paper_testbed
+from repro.scenarios.fabric import FabricState
 
 JOBS = {j: [j, 8 + j] for j in range(8)}
 
 
 def scenario(oversub: float, cnp_jitter: float, seed: int = 0):
-    topo = paper_testbed(oversub)
-    flows = []
+    ecmp = FabricState(paper_testbed(oversub), mode="ecmp", seed=seed)
     for j, hs in JOBS.items():
-        flows += ecmp_allocate(topo, job_ring_requests(j, hs, 8), seed=seed + j)
-    for i, f in enumerate(flows):
-        f.flow_id = i
-    res = max_min_rates(topo, flows, cnp_jitter=cnp_jitter, seed=seed)
-    ecmp = [ring_allreduce_busbw(topo, res.conn_rate, j, 2) for j in JOBS]
+        ecmp.add_job(j, hs)
+    res = ecmp.evaluate(cnp_jitter=cnp_jitter, seed=seed)
+    e_bw = [ecmp.job_busbw(res, j) for j in JOBS]
 
-    m = C4PMaster(topo, qps_per_port=1)
-    m.startup_probe()
+    c4p = FabricState(paper_testbed(oversub), mode="c4p", qps_per_port=1)
     for j, hs in JOBS.items():
-        m.register_job(j, hs)
-    res2 = m.evaluate(dynamic_lb=False, static_failover=False,
-                      cnp_jitter=cnp_jitter, seed=seed)
-    c4p = [m.job_busbw(res2, j) for j in JOBS]
-    return ecmp, c4p
+        c4p.add_job(j, hs)
+    res2 = c4p.evaluate(dynamic_lb=False, static_failover=False,
+                        cnp_jitter=cnp_jitter, seed=seed)
+    c_bw = [c4p.job_busbw(res2, j) for j in JOBS]
+    return e_bw, c_bw
 
 
 def run(quick: bool = False) -> None:

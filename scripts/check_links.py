@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Markdown link checker for README.md + docs/ (CI docs job).
+
+Validates, without network access:
+  * relative links resolve to an existing file or directory,
+  * intra-document anchors (``#section``) match a heading in the target,
+  * bare code-span references to repo paths in tables are not checked
+    (they are prose, not links).
+
+Exit non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def anchor_of(heading: str) -> str:
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors(path: Path) -> set:
+    return {anchor_of(h) for h in HEADING.findall(path.read_text())}
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    for target in LINK.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, frag = target.partition("#")
+        dest = (path.parent / base).resolve() if base else path
+        if not dest.exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+            continue
+        if frag and dest.suffix == ".md" and anchor_of(frag) not in anchors(dest):
+            errors.append(f"{path.relative_to(ROOT)}: missing anchor -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    errors = []
+    for f in files:
+        if f.exists():
+            errors.extend(check_file(f))
+    for e in errors:
+        print(e)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if errors else 'OK'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

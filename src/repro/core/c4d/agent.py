@@ -38,6 +38,13 @@ class AgentReport:
 
 
 class C4Agent:
+    """Per-node batching + prefiltering agent (paper §3.1, Fig. 4).
+
+    ``suspect_z`` is the loose *local* robust-z threshold: records above it
+    are forwarded raw to the master (the tight decision threshold lives in
+    ``detector.DetectorConfig.mad_threshold``); everything else collapses
+    into per-edge medians, keeping monitoring overhead sub-1 %."""
+
     def __init__(self, node_id: int, ranks: Sequence[int],
                  suspect_z: float = 3.0):
         self.node_id = node_id

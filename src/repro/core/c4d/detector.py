@@ -47,6 +47,14 @@ class Verdict:
 
 @dataclass
 class DetectorConfig:
+    """Detector thresholds (paper §3.1; Fig. 6 outlier analysis).
+
+    The robust z-scores come from median/MAD normalisation — BSP traffic is
+    homogeneous, so anything ``mad_threshold`` deviations out is a hardware
+    symptom, not load imbalance.  ``row_col_fraction`` decides when a hot
+    row/column of the delay matrix folds to a rank-level (vs link-level)
+    verdict; ``hang_grace`` is the heartbeat-progress slack before a rank is
+    declared hung."""
     mad_threshold: float = 5.0         # z-score threshold on MAD-normalised stats
     row_col_fraction: float = 0.6      # fraction of a row/col anomalous => rank fault
     hang_grace: float = 3.0            # multiples of median op period before hang
@@ -166,7 +174,13 @@ class HangDetector:
 
 
 class C4DDetector:
-    """Composite: the full analysis the C4D master runs per window."""
+    """Composite: the full analysis the C4D master runs per window (§3.1).
+
+    Hang analysis pre-empts slow analysis — a hung job emits no useful
+    delay statistics, and the paper's steering acts on hangs immediately.
+    Consumed per monitoring window by ``c4d.master.C4DMaster`` and, through
+    it, by every composition layer (trainer drills, Table-3 downtime,
+    scenario campaigns — see docs/architecture.md)."""
 
     def __init__(self, cfg: DetectorConfig = DetectorConfig()):
         self.cfg = cfg

@@ -31,6 +31,15 @@ class NodeAction:
 
 @dataclass
 class C4DMaster:
+    """Per-job detection master (paper §3.1, Fig. 3/4).
+
+    ``window_period_s`` realises the paper's "detection in tens of seconds";
+    slow syndromes additionally wait ``confirm_windows`` consecutive
+    confirmations before a node is isolated (transients clear the streak),
+    while hangs act immediately — the job is already stopped.  Driven by
+    ``scenarios.detection.DetectionHarness`` in every fault drill
+    (campaign engine, Table-3 simulation) and by the Trainer's
+    ``_handle_fault`` loop on live runs."""
     n_ranks: int
     ranks_per_node: int = 8
     detector: C4DDetector = field(default_factory=C4DDetector)

@@ -39,6 +39,13 @@ class LBConfig:
 
 
 class DynamicLoadBalancer:
+    """Completion-time-driven QP re-weighting (paper §3.2, Fig. 11b/12b).
+
+    Multiplicative-weights update toward observed per-path rates; dead QPs
+    re-route to the healthiest usable spine (blacklist- and health-aware).
+    Converges to the per-connection max-min optimum — the near-7/8-ideal
+    recovery after a leaf-spine failure in Fig. 11b."""
+
     def __init__(self, topo: ClosTopology, health: Optional[LinkHealthMonitor] = None,
                  cfg: LBConfig = LBConfig()):
         self.topo = topo

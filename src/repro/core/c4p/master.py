@@ -40,11 +40,15 @@ class JobState:
 
 
 class C4PMaster:
-    """Global traffic-engineering master.
+    """Global traffic-engineering master (paper §3.2).
 
     Lifecycle per the paper: probe -> blacklist faulty links -> serve path
-    requests at connection setup (static TE) -> continuously re-balance QP
-    weights from observed completion times (dynamic LB)."""
+    requests at connection setup (static TE, Fig. 8/9) -> continuously
+    re-balance QP weights from observed completion times (dynamic LB,
+    Fig. 11b/12b).  Composition layers (the scenario campaign engine and
+    the fig9/fig11/fig13 benchmarks) drive it through
+    ``repro.scenarios.fabric.FabricState`` rather than directly, so ECMP/C4P
+    A/B arms always see identical topology and job mixes."""
 
     def __init__(self, topo: ClosTopology, qps_per_port: int = 2,
                  lb_cfg: LBConfig = LBConfig()):

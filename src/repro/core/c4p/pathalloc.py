@@ -48,8 +48,10 @@ class ConnRequest:
 
 
 class PathAllocator:
-    """The C4P master's allocation core. Tracks projected load per link so
-    successive (multi-job) requests spread over the fabric."""
+    """The C4P master's allocation core (paper §3.2: static traffic
+    engineering at connection setup).  Tracks projected load per link so
+    successive (multi-job) requests spread over the fabric — this is what
+    removes the ECMP hash collisions behind Fig. 8/9."""
 
     def __init__(self, topo: ClosTopology, health: Optional[LinkHealthMonitor] = None):
         self.topo = topo

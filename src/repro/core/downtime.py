@@ -7,14 +7,21 @@ Two policies over the same fault sequence:
     (hours-to-days, log-spelunking across generic "NCCL Error"s);
     checkpoints are infrequent.
   * C4D (December 2023): the detection pipeline *actually runs* — for every
-    injected fault we synthesise enhanced-CCL telemetry, feed it through the
-    C4a agents and the C4D master, and act on the verdict. Localised faults
-    are isolated + restarted in minutes; non-localised ones (Table 1
+    injected fault the shared ``repro.scenarios.detection.DetectionHarness``
+    synthesises enhanced-CCL telemetry, feeds it through the C4a agents and
+    the C4D master, and this simulator acts on the verdict. Localised
+    faults are isolated + restarted in minutes; non-localised ones (Table 1
     localization rates) fall back to assisted manual diagnosis. Checkpoints
     are frequent (10 min, Gemini-style in-memory).
 
 Downtime components per error (paper Fig. 1): detection, diagnosis &
 isolation, post-checkpoint (lost work), re-initialisation.
+
+This module is a thin consumer of the scenario campaign engine's building
+blocks (see docs/architecture.md); event-scripted drills over the same
+pipeline live in ``repro.scenarios``.  The Table-3 output is regression
+pinned (tests/test_downtime_regression.py) — RNG draw order is part of the
+contract.
 """
 from __future__ import annotations
 
@@ -23,9 +30,9 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core.c4d.master import C4DMaster
 from repro.core.cluster import SimCluster, SteeringService
-from repro.core.faults import ErrorClass, RingJobTelemetry, fault_for_class, sample_error_class
+from repro.core.faults import RingJobTelemetry, sample_error_class
+from repro.scenarios.detection import DetectionHarness
 
 HOURS = 3600.0
 DAYS = 24 * HOURS
@@ -94,33 +101,6 @@ class DowntimeSimulator:
         self.ranks_per_node = ranks_per_node
         self.seed = seed
 
-    def _c4d_detect(self, cls: ErrorClass, master: C4DMaster,
-                    telemetry: RingJobTelemetry,
-                    rng: np.random.Generator) -> (bool, float, int):
-        """Run the real detection pipeline for one fault instance.
-
-        Returns (localized, detection_latency_s, implicated_node)."""
-        n_ranks = telemetry.n
-        rank = int(rng.integers(0, n_ranks))
-        fault = fault_for_class(cls, rank, n_ranks, rng)
-        # feed windows until the master acts (confirmation logic inside)
-        latency = 0.0
-        actions = []
-        for w in range(4):
-            win = telemetry.window(window_id=w, faults=[fault])
-            actions = master.ingest(win)
-            latency += master.window_period_s
-            if actions:
-                break
-        if not actions:
-            return False, latency, -1
-        expected_node = master.node_of(rank)
-        hit = any(a.node_id == expected_node for a in actions)
-        # Table-1 localization ceiling: some errors are inherently ambiguous
-        if rng.random() > cls.localization_rate:
-            hit = False
-        return hit, latency, expected_node
-
     def run(self, policy: Policy, month_days: float = 30.0) -> DowntimeReport:
         rng = np.random.default_rng(self.seed)
         month = month_days * DAYS
@@ -132,6 +112,9 @@ class DowntimeSimulator:
         # modest telemetry job standing in for the 2400-GPU job (detector
         # behaviour is rank-count independent; 64 ranks keeps the sim fast)
         telemetry = RingJobTelemetry(n_ranks=64, seed=self.seed + 1)
+        # the same harness the scenario campaign engine drives: telemetry
+        # synthesis -> C4a agents -> C4D master, fresh master per error
+        harness = DetectionHarness(telemetry, ranks_per_node=8)
 
         for e in range(n_errors):
             cls = sample_error_class(rng)
@@ -139,13 +122,12 @@ class DowntimeSimulator:
             lost = rng.uniform(0, policy.checkpoint_period_s)
             report.post_checkpoint_s += lost
             if policy.use_c4d:
-                master = C4DMaster(n_ranks=telemetry.n, ranks_per_node=8)
-                localized, det_s, node = self._c4d_detect(cls, master, telemetry, rng)
-                report.detection_s += det_s
-                if localized:
+                out = harness.detect_class(cls, rng)
+                report.detection_s += out.detection_s
+                if out.localized:
                     report.localized += 1
-                    _, steer_s = steering.execute(node % self.n_nodes, t=0.0,
-                                                  reason=cls.name)
+                    _, steer_s = steering.execute(out.node % self.n_nodes,
+                                                  t=0.0, reason=cls.name)
                     diag = steer_s + rng.uniform(2 * 60, 8 * 60)  # verdict->action
                 else:
                     diag = float(np.clip(

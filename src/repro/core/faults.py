@@ -11,8 +11,10 @@ as generic "NCCL Error"s) and how often each class is localisable:
 
 ``RingJobTelemetry`` synthesises the enhanced-CCL telemetry of a healthy
 ring-allreduce job and injects fault signatures — this is what the C4D
-detectors consume, both in tests and inside the downtime simulation (the
-detection pipeline actually runs per error; it is not a constant).
+detectors consume everywhere the pipeline runs: tests, the Table-3 downtime
+simulation, and the scenario campaign engine (all through
+``repro.scenarios.detection.DetectionHarness``; the detection pipeline
+actually runs per error, it is not a sampled constant).
 """
 from __future__ import annotations
 

@@ -1,0 +1,26 @@
+"""Scenario campaign engine — end-to-end C4 fault drills (docs/scenarios.md).
+
+Composes the full paper loop on one shared virtual clock:
+
+    telemetry synthesis (core/faults)  ->  C4D detection (core/c4d)
+      ->  isolation (core/cluster)     ->  C4P re-planning (core/c4p, netsim)
+      ->  checkpoint-restart accounting (Table 3 phases)
+
+Entry points:
+
+  * ``repro.scenarios.library.get(name)``  — a shipped ``ScenarioSpec``
+  * ``repro.scenarios.engine.CampaignEngine(spec).run()`` — one drill
+  * ``python -m repro.scenarios.run --list``  — the CLI
+
+``core/downtime.py`` (Table 3) and the fig9/fig11/fig13 benchmarks are thin
+consumers of the same building blocks (``detection.DetectionHarness``,
+``fabric.FabricState``), so this package is the single composition layer.
+"""
+from repro.scenarios.engine import CampaignEngine, run_scenario
+from repro.scenarios.spec import (Assertions, FailLink, InjectFault, JobSpec,
+                                  RestoreLink, ScenarioSpec, StartJob, StopJob)
+
+__all__ = [
+    "Assertions", "CampaignEngine", "FailLink", "InjectFault", "JobSpec",
+    "RestoreLink", "ScenarioSpec", "StartJob", "StopJob", "run_scenario",
+]

@@ -1,0 +1,162 @@
+"""Per-fault C4D detection harness + the netsim -> telemetry bridge.
+
+``DetectionHarness`` runs the *real* detection pipeline (telemetry window
+synthesis -> C4a agents -> C4D master) for one injected fault and returns
+the measured latency and localisation verdict.  It is the single detection
+path shared by
+
+  * the campaign engine (``scenarios.engine``) — against the live fabric,
+  * the Table-3 month simulation (``core/downtime.py``) — per sampled error.
+
+``bridge_faults`` translates live netsim state (per-connection rate drops
+relative to a healthy baseline) into enhanced-CCL telemetry signatures, so
+fabric events (FailLink, contention) become visible to C4D through the same
+delay-matrix analysis the paper describes (§3.1, Fig. 6) instead of through
+sampled constants.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.c4d.master import C4DMaster, NodeAction
+from repro.core.faults import (ErrorClass, Fault, RingJobTelemetry,
+                               fault_for_class)
+
+
+@dataclass
+class DetectionOutcome:
+    """Result of running the pipeline for one fault instance."""
+    localized: bool                 # correct component implicated
+    detection_s: float              # windows consumed * window period
+    node: int                       # implicated telemetry node (-1: none)
+    windows: int = 0
+    acted: bool = False             # master issued any action at all
+    syndromes: Tuple[str, ...] = ()
+    links: Tuple[Tuple[int, int], ...] = ()   # implicated telemetry links
+
+
+@dataclass
+class DetectionHarness:
+    """Runs telemetry -> agents -> master for injected faults.
+
+    A fresh ``C4DMaster`` is built per fault (each drill starts from a clean
+    confirmation state, matching the paper's per-incident analysis); the
+    ``RingJobTelemetry`` instance persists so its jitter stream — and hence
+    any caller's reproducibility guarantees — is preserved across faults.
+    """
+    telemetry: RingJobTelemetry
+    ranks_per_node: int = 8
+    max_windows: int = 4
+    window_period_s: Optional[float] = None   # default: master's 30 s
+
+    def _master(self) -> C4DMaster:
+        m = C4DMaster(n_ranks=self.telemetry.n, ranks_per_node=self.ranks_per_node)
+        if self.window_period_s is not None:
+            m.window_period_s = self.window_period_s
+        return m
+
+    # ------------------------------------------------------------------
+    def detect_faults(self, faults: Sequence[Fault],
+                      expected_node: Optional[int] = None) -> DetectionOutcome:
+        """Feed windows until the master acts (or ``max_windows`` pass).
+
+        ``expected_node``: ground-truth node; the outcome is ``localized``
+        iff some action lands on it.  With no ground truth, any action
+        counts as localised."""
+        master = self._master()
+        latency = 0.0
+        actions: List[NodeAction] = []
+        windows = 0
+        for w in range(self.max_windows):
+            win = self.telemetry.window(window_id=w, faults=list(faults))
+            actions = master.ingest(win)
+            latency += master.window_period_s
+            windows = w + 1
+            if actions:
+                break
+        if not actions:
+            return DetectionOutcome(False, latency, -1, windows)
+        syndromes = tuple(v.syndrome for a in actions for v in a.verdicts)
+        links = tuple(v.link for a in actions for v in a.verdicts
+                      if v.link is not None)
+        if expected_node is None:
+            hit, node = True, actions[0].node_id
+        else:
+            hit = any(a.node_id == expected_node for a in actions)
+            node = expected_node
+        return DetectionOutcome(hit, latency, node, windows, acted=True,
+                                syndromes=syndromes, links=links)
+
+    def detect_class(self, cls: ErrorClass,
+                     rng: np.random.Generator) -> DetectionOutcome:
+        """One Table-1 error: draw a victim rank, instantiate its telemetry
+        signature, run the pipeline, and apply the Table-1 localisation
+        ceiling (some classes are inherently ambiguous).
+
+        RNG draw order (rank, fault parameters, ceiling) is part of the
+        contract: ``core/downtime.py`` Table-3 numbers are regression-pinned
+        on it."""
+        n_ranks = self.telemetry.n
+        rank = int(rng.integers(0, n_ranks))
+        fault = fault_for_class(cls, rank, n_ranks, rng)
+        expected = rank // self.ranks_per_node
+        out = self.detect_faults([fault], expected_node=expected)
+        if not out.acted:
+            return out
+        if rng.random() > cls.localization_rate:
+            out.localized = False
+        return out
+
+
+# ---------------------------------------------------------------------------
+# netsim -> telemetry bridge
+# ---------------------------------------------------------------------------
+
+def bridge_faults(baseline_conn: Dict[Tuple, float],
+                  current_conn: Dict[Tuple, float],
+                  host_to_rank: Dict[int, int],
+                  n_ranks: int,
+                  threshold: float = 1.8,
+                  severity_cap: float = 50.0) -> Tuple[List[Fault], List[Tuple[int, int]]]:
+    """Synthesise slow-link telemetry from live fabric degradation.
+
+    For every connection whose max-min rate fell below ``baseline /
+    threshold``, emit a ``slow_link`` fault with severity equal to the
+    observed slowdown ratio (capped — a fully dead path would otherwise be
+    an infinite multiplier).  Connection keys follow the C4P convention
+    ``(job, (src_host, dst_host), nic, ...)``; ``host_to_rank`` maps testbed
+    hosts onto the telemetry ring.
+
+    The fault lands on the *canonical ring edge of the connection's source
+    host*: ``(r, r+1)`` for ``r = host_to_rank[src]``.  The synthetic
+    telemetry ring only carries traffic on its channel-stride edges, and
+    stride 1 always exists, so this is the edge where the degradation is
+    guaranteed to be emitted — and hence observable by the delay-matrix
+    point/row analysis.  The detector must implicate exactly this edge for
+    the verdict to count as a hit.
+
+    Returns (faults, affected_edges) where ``affected_edges`` is the
+    ground-truth set of telemetry edges a correct detector should implicate.
+    """
+    worst: Dict[Tuple[int, int], float] = {}
+    for cid, base in baseline_conn.items():
+        if base <= 1e-9:
+            continue
+        cur = current_conn.get(cid, 0.0)
+        ratio = severity_cap if cur <= base / severity_cap else base / cur
+        if ratio < threshold:
+            continue
+        src, _dst = cid[1]
+        if src not in host_to_rank:
+            continue
+        r = host_to_rank[src] % n_ranks
+        e = (r, (r + 1) % n_ranks)
+        if e[0] == e[1]:
+            continue
+        worst[e] = max(worst.get(e, 0.0), min(ratio, severity_cap))
+    faults = [Fault("slow_link", link=e, severity=s)
+              for e, s in sorted(worst.items())]
+    return faults, sorted(worst)

@@ -1,0 +1,136 @@
+"""Scenario campaign CLI.
+
+    PYTHONPATH=src python -m repro.scenarios.run --list
+    PYTHONPATH=src python -m repro.scenarios.run --scenario single_nic_down
+    PYTHONPATH=src python -m repro.scenarios.run --all --json reports/
+    PYTHONPATH=src python -m repro.scenarios.run --scenario ecmp_vs_c4p_ab --json -
+
+Per-scenario reports carry detection latency, localisation verdicts, the
+Table-3 downtime phase breakdown, and effective goodput; ``--json`` writes
+the full machine-readable report (a file per scenario when given a
+directory, stdout with ``-``).  Exit status is non-zero when any scenario's
+spec assertions fail (CI uses this as the scenario-smoke gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+from repro.scenarios import library
+from repro.scenarios.engine import run_scenario
+
+
+def _summary_lines(rep: dict) -> List[str]:
+    det = rep["detection"]
+    down = rep["downtime"]
+    good = rep["goodput"]
+    lines = [
+        f"scenario      : {rep['scenario']}  [{rep['fabric']}]  seed={rep['seed']}",
+        f"paper ref     : {rep['paper_ref']}",
+        f"restarts      : {rep['restarts']}",
+        f"detection     : {det['n_faults']} fault(s), "
+        f"mean latency {det['mean_latency_s']:.0f} s, "
+        f"localization {det['localization_hits']}/{det['n_faults']}",
+        "downtime      : total {:.0f} s ({:.2%} of run) = det {:.0f} + "
+        "diag/iso {:.0f} + post-ckpt {:.0f} + reinit {:.0f}".format(
+            down["total_s"], down["fraction_of_duration"],
+            down["detection_s"], down["diagnosis_isolation_s"],
+            down["post_checkpoint_s"], down["re_initialization_s"]),
+        f"goodput       : {good['effective_gbps']:.1f} / "
+        f"{good['ideal_gbps']:.1f} Gbps effective ({good['fraction']:.2%})",
+    ]
+    if rep["network"]["n_events"]:
+        obs = sum(1 for d in rep["network"]["detections"] if d["observed"])
+        lines.append(f"network       : {rep['network']['n_events']} fabric "
+                     f"observation(s), {obs} seen by C4D")
+    if "ab" in rep:
+        ab = rep["ab"]
+        lines.append(f"A/B           : C4P {ab['c4p_effective_gbps']:.1f} vs "
+                     f"ECMP {ab['ecmp_effective_gbps']:.1f} Gbps "
+                     f"({ab['gain_pct']:+.1f} %)")
+    for c in rep["checks"]:
+        mark = "PASS" if c["ok"] else "FAIL"
+        lines.append(f"assert {mark}   : {c['name']} "
+                     f"(value={c['value']}, limit={c['limit']})")
+    return lines
+
+
+def _write_json(rep: dict, dest: str) -> None:
+    if dest == "-":
+        json.dump(rep, sys.stdout, indent=1, default=str)
+        sys.stdout.write("\n")
+        return
+    if dest.endswith(".json") and not os.path.isdir(dest):
+        path = dest                  # explicit single-file destination
+    else:
+        # anything else is a directory: one report per scenario, so
+        # multi-scenario runs never silently overwrite each other
+        os.makedirs(dest, exist_ok=True)
+        path = os.path.join(dest, f"{rep['scenario']}.json")
+    with open(path, "w") as f:
+        json.dump(rep, f, indent=1, default=str)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.scenarios.run",
+        description="Run end-to-end C4 fault drills (docs/scenarios.md).")
+    ap.add_argument("--list", action="store_true",
+                    help="list shipped scenarios and exit")
+    ap.add_argument("--scenario", action="append", default=[],
+                    help="scenario name (repeatable)")
+    ap.add_argument("--all", action="store_true", help="run every scenario")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write report(s) as JSON: a *.json file, a "
+                         "directory (one file per scenario), or '-' for "
+                         "stdout")
+    ap.add_argument("--no-assert", action="store_true",
+                    help="report assertion failures but exit 0")
+    ap.add_argument("--live", action="store_true",
+                    help="also replay the fault script on the real trainer "
+                         "(requires jax; see repro.scenarios.live)")
+    ap.add_argument("--live-steps", type=int, default=14,
+                    help="trainer steps for --live replay")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in library.names():
+            spec = library.get(name)
+            print(f"{name:28s} {spec.paper_ref}")
+        return 0
+
+    targets = library.names() if args.all else args.scenario
+    if not targets:
+        ap.error("nothing to do: pass --list, --scenario NAME, or --all")
+
+    failed: List[str] = []
+    for name in targets:
+        spec = library.get(name, seed=args.seed)
+        rep = run_scenario(spec)
+        if args.live:
+            import tempfile
+
+            from repro.scenarios import live
+            with tempfile.TemporaryDirectory() as tmp:
+                rep["live"] = live.drive(spec, workdir=tmp,
+                                         n_steps=args.live_steps)
+        if args.json != "-":
+            for line in _summary_lines(rep):
+                print(line)
+            print()
+        if args.json:
+            _write_json(rep, args.json)
+        if not rep["passed"]:
+            failed.append(name)
+    if failed and not args.no_assert:
+        print(f"scenario assertions failed: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,6 +11,11 @@ Orchestrates:
     over the healthy host set and the job restores from the last valid
     checkpoint — data pipeline determinism guarantees the stream resumes
     exactly.
+
+The control-plane pieces (cluster, steering, C4D master, telemetry) are
+injectable, so outer composition layers — notably the scenario campaign
+engine's live driver (``repro.scenarios.live``) — can replay an
+event-scripted drill on this real training loop against shared state.
 """
 from __future__ import annotations
 
@@ -68,7 +73,11 @@ class Trainer:
     def __init__(self, run: RunConfig, shape: ShapeSpec, workdir: str,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  sim_nodes: int = 4, use_kernel: bool = False,
-                 checkpoint_async: bool = True):
+                 checkpoint_async: bool = True,
+                 cluster: Optional[SimCluster] = None,
+                 steering: Optional[SteeringService] = None,
+                 c4d: Optional[C4DMaster] = None,
+                 telemetry: Optional[RingJobTelemetry] = None):
         self.run = run
         self.shape = shape
         self.mesh = mesh or jc.make_mesh(
@@ -83,11 +92,16 @@ class Trainer:
         self.pipeline = TokenPipeline(run.model, shape,
                                       PipelineConfig(seed=run.train.seed))
         self.monitor = StepMonitor()
-        # simulated production cluster + C4D control plane
-        self.cluster = SimCluster(n_active=sim_nodes, n_backup=max(1, sim_nodes // 4))
-        self.steering = SteeringService(self.cluster)
-        self.telemetry = RingJobTelemetry(n_ranks=sim_nodes * 8, seed=run.train.seed)
-        self.c4d = C4DMaster(n_ranks=sim_nodes * 8, ranks_per_node=8)
+        # simulated production cluster + C4D control plane; each piece can be
+        # injected by an outer composition layer (the scenario campaign
+        # engine / live driver share one cluster and telemetry stream across
+        # the drill — see repro.scenarios.live)
+        self.cluster = cluster or SimCluster(n_active=sim_nodes,
+                                             n_backup=max(1, sim_nodes // 4))
+        self.steering = steering or SteeringService(self.cluster)
+        self.telemetry = telemetry or RingJobTelemetry(n_ranks=sim_nodes * 8,
+                                                       seed=run.train.seed)
+        self.c4d = c4d or C4DMaster(n_ranks=self.telemetry.n, ranks_per_node=8)
         self.report = TrainerReport()
         self._build()
 

@@ -1,0 +1,53 @@
+"""Regression pins for the Table-3 downtime numbers through the engine path.
+
+PR 3 refactored ``core/downtime.py`` onto the scenario engine's shared
+``DetectionHarness``; these goldens (captured from the pre-refactor
+implementation) guarantee the composition change kept the simulated month
+bit-identical — RNG draw order through the harness is part of the contract.
+"""
+import numpy as np
+
+from repro.core.downtime import table3
+
+# (seed, n_nodes) -> name -> (n_errors, localized, detection_s, diagnosis_s,
+#                             post_checkpoint_s, reinit_s)
+GOLDEN = {
+    (0, 300): {
+        "jun_2023_baseline": (43, 0, 54000.0, 582225.8161660593,
+                              212216.5406182471, 15480.0),
+        "dec_2023_c4d": (13, 9, 570.0, 15888.034165667745,
+                         3195.685940749585, 4290.0),
+    },
+    (1, 128): {
+        "jun_2023_baseline": (40, 0, 55200.0, 575823.255896502,
+                              189216.1320358528, 14400.0),
+        "dec_2023_c4d": (10, 7, 450.0, 13216.910904938193,
+                         2896.6972639512387, 3300.0),
+    },
+}
+
+
+def test_table3_bitwise_regression():
+    for (seed, n_nodes), expected in GOLDEN.items():
+        res = table3(seed=seed, n_nodes=n_nodes)
+        assert set(res) == set(expected)
+        for name, rep in res.items():
+            want = expected[name]
+            got = (rep.n_errors, rep.localized, rep.detection_s,
+                   rep.diagnosis_s, rep.post_checkpoint_s, rep.reinit_s)
+            assert got[:2] == want[:2], (name, got, want)
+            np.testing.assert_allclose(got[2:], want[2:], rtol=0, atol=0,
+                                       err_msg=name)
+
+
+def test_table3_uses_shared_harness():
+    """The Table-3 path must stay a thin consumer of the engine's detection
+    harness (the single-composition-layer invariant)."""
+    import inspect
+
+    from repro.core import downtime
+    from repro.scenarios.detection import DetectionHarness
+
+    src = inspect.getsource(downtime)
+    assert "DetectionHarness" in src
+    assert DetectionHarness is downtime.DetectionHarness

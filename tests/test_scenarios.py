@@ -1,0 +1,246 @@
+"""Scenario campaign engine: determinism, per-family drills, CLI contract."""
+import json
+
+import pytest
+
+from repro.scenarios import library
+from repro.scenarios.detection import DetectionHarness, bridge_faults
+from repro.scenarios.engine import run_scenario
+from repro.scenarios.fabric import FabricState
+from repro.scenarios.run import main as cli_main
+from repro.scenarios.spec import (Assertions, FailLink, InjectFault, JobSpec,
+                                  ScenarioSpec, event_from_dict)
+from repro.core.faults import RingJobTelemetry
+
+
+# ---------------------------------------------------------------------------
+# engine invariants
+# ---------------------------------------------------------------------------
+
+def test_library_ships_at_least_eight():
+    assert len(library.names()) >= 8
+
+
+def test_deterministic_replay():
+    """Same seed + spec => byte-identical JSON report."""
+    spec = library.get("ecmp_vs_c4p_ab", seed=3)
+    a = json.dumps(run_scenario(spec), sort_keys=True, default=str)
+    b = json.dumps(run_scenario(spec), sort_keys=True, default=str)
+    assert a == b
+
+
+def test_seed_changes_report():
+    a = run_scenario(library.get("single_nic_down", seed=0))
+    b = run_scenario(library.get("single_nic_down", seed=5))
+    assert a["seed"] != b["seed"]
+    # detection still works on both, but the sampled diagnosis draw differs
+    assert a["downtime"]["total_s"] != b["downtime"]["total_s"]
+
+
+def test_report_required_fields():
+    rep = run_scenario(library.get("single_nic_down"))
+    assert rep["detection"]["n_faults"] == 1
+    assert rep["detection"]["latencies_s"]
+    assert rep["detection"]["localization_accuracy"] == 1.0
+    down = rep["downtime"]
+    for phase in ("detection_s", "diagnosis_isolation_s",
+                  "post_checkpoint_s", "re_initialization_s"):
+        assert down[phase] >= 0.0
+    assert down["total_s"] == pytest.approx(
+        sum(down[k] for k in ("detection_s", "diagnosis_isolation_s",
+                              "post_checkpoint_s", "re_initialization_s")))
+    assert 0.0 < rep["goodput"]["fraction"] <= 1.0
+    assert rep["passed"] is True
+
+
+def test_all_shipped_scenarios_pass_their_assertions():
+    for name in library.names():
+        rep = run_scenario(library.get(name))
+        failed = [c for c in rep["checks"] if not c["ok"]]
+        assert not failed, (name, failed)
+
+
+# ---------------------------------------------------------------------------
+# one drill per scenario family
+# ---------------------------------------------------------------------------
+
+def test_family_node_fault_single_nic_down():
+    rep = run_scenario(library.get("single_nic_down"))
+    f = rep["detection"]["faults"][0]
+    assert f["kind"] == "crash" and f["localized"]
+    assert f["windows"] == 1                      # hangs act immediately
+    assert rep["restarts"] == 1
+    assert rep["downtime"]["post_checkpoint_s"] > 0
+
+
+def test_family_degradation_needs_confirmation():
+    rep = run_scenario(library.get("silent_pcie_degradation"))
+    f = rep["detection"]["faults"][0]
+    assert f["windows"] == 2                      # confirm_windows streak
+    assert f["detection_s"] == pytest.approx(60.0)
+
+
+def test_family_straggler_noncomm_syndrome():
+    rep = run_scenario(library.get("straggler_gpu"))
+    assert any("noncomm" in s for f in rep["detection"]["faults"]
+               for s in f["syndromes"])
+
+
+def test_family_storm_absorbs_three_restarts():
+    rep = run_scenario(library.get("nccl_timeout_storm"))
+    assert rep["restarts"] == 3
+    assert rep["detection"]["localization_hits"] == 3
+    # each fault resumed before the next landed
+    resumes = [f["resume_t"] for f in rep["detection"]["faults"]]
+    starts = [f["t"] for f in rep["detection"]["faults"]]
+    assert all(r < s for r, s in zip(resumes[:-1], starts[1:]))
+
+
+def test_family_fault_during_restart_queues():
+    rep = run_scenario(library.get("fault_during_restart"))
+    assert rep["restarts"] == 2
+    first, second = rep["detection"]["faults"]
+    # the second fault manifests exactly when the first restart completes
+    assert second["t"] == pytest.approx(first["resume_t"])
+
+
+def test_family_fabric_flaps_observed_and_healed():
+    rep = run_scenario(library.get("cascading_spine_flaps"))
+    assert rep["restarts"] == 0                   # link faults never isolate
+    net = rep["network"]["detections"]
+    assert net, "bridge must surface the transient degradation"
+    assert any(d["observed"] for d in net)
+    # C4P re-planning keeps goodput near ideal despite three flaps
+    assert rep["goodput"]["fraction"] > 0.85
+
+
+def test_family_contention_ab_orders_fabrics():
+    rep = run_scenario(library.get("multijob_contention"))
+    ab = rep["ab"]
+    assert ab["c4p_effective_gbps"] >= ab["ecmp_effective_gbps"]
+    assert "c4p" in rep["variants"] and "ecmp" in rep["variants"]
+
+
+def test_family_full_ab_c4p_ge_ecmp():
+    rep = run_scenario(library.get("ecmp_vs_c4p_ab"))
+    assert rep["ab"]["c4p_effective_gbps"] >= rep["ab"]["ecmp_effective_gbps"]
+    assert any(c["name"] == "c4p_ge_ecmp" and c["ok"] for c in rep["checks"])
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def test_detection_harness_latency_model():
+    tel = RingJobTelemetry(n_ranks=32, seed=0)
+    h = DetectionHarness(tel)
+    from repro.core.faults import Fault
+    out = h.detect_faults([Fault("comm_hang", rank=9)], expected_node=1)
+    assert out.acted and out.localized and out.windows == 1
+    out2 = h.detect_faults([Fault("slow_src", rank=9)], expected_node=1)
+    assert out2.acted and out2.windows == 2       # confirmation streak
+    out3 = h.detect_faults([], expected_node=0)
+    assert not out3.acted and out3.windows == h.max_windows
+
+
+def test_bridge_translates_rate_drops():
+    baseline = {(0, (0, 8), n): 200.0 for n in range(8)}
+    current = dict(baseline)
+    for n in range(8):
+        current[(0, (0, 8), n)] = 40.0            # 5x slowdown
+    faults, truth = bridge_faults(baseline, current,
+                                  host_to_rank={0: 0, 8: 16}, n_ranks=32)
+    # canonical stride-1 ring edge of the source host's telemetry rank
+    assert truth == [(0, 1)]
+    assert faults[0].kind == "slow_link"
+    assert faults[0].severity == pytest.approx(5.0)
+    # healthy fabric -> no signatures
+    none, _ = bridge_faults(baseline, baseline, {0: 0, 8: 16}, 32)
+    assert none == []
+
+
+def test_bridge_faults_are_detectable():
+    """A bridged signature must actually surface in the synthetic telemetry
+    and be implicated by the detectors — the detect->blacklist composition
+    runs on real signal, not jitter."""
+    tel = RingJobTelemetry(n_ranks=32, seed=7)
+    h = DetectionHarness(tel)
+    baseline = {(0, (0, 8), n): 200.0 for n in range(8)}
+    current = {k: 25.0 for k in baseline}         # 8x slowdown
+    faults, truth = bridge_faults(baseline, current,
+                                  host_to_rank={0: 0, 8: 16}, n_ranks=32)
+    out = h.detect_faults(faults)
+    assert out.acted
+    assert set(out.links) & set(truth), (out.links, truth)
+
+
+def test_fabric_state_ecmp_vs_c4p_busbw():
+    jobs = {j: [j, 8 + j] for j in range(8)}
+    e = FabricState(mode="ecmp", seed=0)
+    c = FabricState(mode="c4p", qps_per_port=1)
+    for j, hs in jobs.items():
+        e.add_job(j, hs)
+        c.add_job(j, hs)
+    re_ = e.evaluate()
+    rc = c.evaluate(dynamic_lb=False, static_failover=False)
+    import numpy as np
+    assert np.mean(list(c.all_busbw(rc).values())) > \
+        np.mean(list(e.all_busbw(re_).values()))
+
+
+def test_fabric_state_remove_job_restores_capacity():
+    fab = FabricState(mode="c4p", qps_per_port=1)
+    fab.add_job(0, [0, 8])
+    base = fab.job_busbw(fab.evaluate(dynamic_lb=False), 0)
+    for j in range(1, 8):
+        fab.add_job(j, [j, 8 + j])
+    for j in range(1, 8):
+        fab.remove_job(j)
+    again = fab.job_busbw(fab.evaluate(dynamic_lb=False), 0)
+    assert again == pytest.approx(base, rel=1e-6)
+
+
+def test_event_roundtrip():
+    ev = FailLink(t=120.0, link=("ls", 0, 3))
+    assert event_from_dict(ev.to_dict()) == ev
+    iv = InjectFault(t=60.0, job_id=2, kind="straggler", rank=4, severity=9.0)
+    assert event_from_dict(iv.to_dict()) == iv
+
+
+def test_engine_custom_spec_smoke():
+    """Author-your-own path from docs/scenarios.md stays green."""
+    spec = ScenarioSpec(
+        name="custom", description="doc example", duration_s=1800.0,
+        jobs=(JobSpec(0, tuple(range(8))),),
+        events=(InjectFault(t=700.0, job_id=0, kind="comm_hang", rank=5),),
+        assertions=Assertions(min_restarts=1))
+    rep = run_scenario(spec)
+    assert rep["passed"] and rep["restarts"] == 1
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+# ---------------------------------------------------------------------------
+
+def test_cli_list(capsys):
+    assert cli_main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for name in library.names():
+        assert name in out
+
+
+def test_cli_json_report(tmp_path, capsys):
+    rc = cli_main(["--scenario", "single_nic_down",
+                   "--json", str(tmp_path) + "/"])
+    assert rc == 0
+    rep = json.loads((tmp_path / "single_nic_down.json").read_text())
+    assert rep["scenario"] == "single_nic_down"
+    assert rep["detection"]["n_faults"] == 1
+    assert rep["downtime"]["total_s"] > 0
+    out = capsys.readouterr().out
+    assert "assert PASS" in out
+
+
+def test_cli_unknown_scenario_errors():
+    with pytest.raises(KeyError):
+        cli_main(["--scenario", "does_not_exist"])

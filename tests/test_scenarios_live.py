@@ -1,0 +1,32 @@
+"""Live-trainer scenario replay: the spec's fault script on the real stack."""
+from repro.scenarios import library, live
+from repro.scenarios.spec import InjectFault, ScenarioSpec
+
+
+def test_fault_schedule_maps_events_to_steps():
+    spec = library.get("nccl_timeout_storm")
+    sched = live.fault_schedule(spec, n_steps=20)
+    assert len(sched) == 3
+    assert all(1 <= s <= 19 for s in sched)
+    assert all(f.kind == "comm_hang" for f in sched.values())
+    # cascading events that collapse onto one step stay distinct
+    tight = ScenarioSpec(
+        name="t", description="", duration_s=1000.0,
+        events=(InjectFault(t=500.0, job_id=0, kind="crash", rank=1),
+                InjectFault(t=501.0, job_id=0, kind="comm_hang", rank=2)))
+    s2 = live.fault_schedule(tight, n_steps=10)
+    assert len(s2) == 2
+
+
+def test_live_drive_single_nic_down(tmp_path):
+    """The scripted drill replays on the real Trainer: real jitted steps,
+    real checkpoint restore, isolation on the shared SimCluster."""
+    spec = library.get("single_nic_down")
+    rep = live.drive(spec, workdir=str(tmp_path), n_steps=12, sim_nodes=4)
+    assert rep["restarts"] == 1
+    assert rep["steps_run"] >= 12
+    det = rep["detections"][0]
+    assert det["fault"] == "crash"
+    assert det["isolated"], "backup swap must have happened"
+    assert rep["isolated_nodes"], "shared cluster must show the isolation"
+    assert rep["final_loss"] is not None

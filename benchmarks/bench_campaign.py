@@ -1,0 +1,46 @@
+"""Monte Carlo campaign throughput (docs/campaigns.md).
+
+Runs a seeded campaign single-process and reports trials/s plus the
+headline fleet aggregates, so the perf-smoke JSON tracks both the cost and
+the statistical output of the campaign layer.  The acceptance-scale run
+(64 trials x 1024 GPUs, < 120 s budget) stays in ``--full`` mode; quick
+mode samples the same code paths at CI size.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.scenarios.montecarlo import get, run_campaign
+
+
+def _one(name: str, n_trials: int, gpus: int) -> None:
+    cam = get(name, n_trials=n_trials, gpus=gpus)
+    t0 = time.perf_counter()
+    report = run_campaign(cam, workers=1)
+    wall = time.perf_counter() - t0
+    agg = report.aggregates
+    eff = agg["efficiency"]["gain_pct"]
+    emit(f"campaign/{name}_{gpus}gpu", wall / max(n_trials, 1) * 1e6, {
+        "trials": n_trials,
+        "gpus": gpus,
+        "wall_s": f"{wall:.1f}",
+        "trials_per_s": f"{n_trials / wall:.2f}",
+        "faults": agg["detection"]["n_faults"],
+        "precision": f"{agg['detection']['precision']:.3f}",
+        "recall": f"{agg['detection']['recall']:.3f}",
+        "mttr_p50_s": f"{agg['overhead']['mttr_s']['p50'] or 0:.0f}",
+        "efficiency_gain_pct":
+            f"{eff['mean']:.1f}" if eff["mean"] is not None else "n/a",
+        "brackets_paper": eff["brackets_paper"],
+    })
+
+
+def run(quick: bool = False) -> None:
+    if quick:
+        _one("fleet_smoke", n_trials=4, gpus=64)
+        _one("fleet_1024", n_trials=2, gpus=1024)
+    else:
+        _one("fleet_smoke", n_trials=8, gpus=64)
+        _one("fleet_1024", n_trials=16, gpus=1024)
+        _one("paper_claims", n_trials=32, gpus=256)

@@ -27,6 +27,7 @@ BENCHES = [
     ("fig11", "benchmarks.bench_fig11_linkfail"),
     ("fig13", "benchmarks.bench_fig13_jobs"),
     ("detection", "benchmarks.bench_detection_latency"),
+    ("campaign", "benchmarks.bench_campaign"),
 ]
 
 

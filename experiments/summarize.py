@@ -1,11 +1,27 @@
 """Generate the EXPERIMENTS.md dry-run + roofline tables from the JSONs.
 
     python experiments/summarize.py > experiments/tables.md
+    python experiments/summarize.py --campaign reports/paper_claims.json
+
+``--campaign`` renders one or more saved Monte Carlo campaign reports
+(the JSON written by ``repro.scenarios.run --campaign ... --json``) as
+markdown through ``repro.scenarios.report.render_markdown`` — the same
+tables the ``--md`` flag produces at run time (docs/campaigns.md).
 """
 import glob
 import json
+import os
+import sys
 
 GiB = 2 ** 30
+
+
+def render_campaigns(paths):
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.scenarios.report import render_markdown
+    for path in paths:
+        with open(path) as f:
+            print(render_markdown(json.load(f)))
 
 
 def load(mesh):
@@ -52,4 +68,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    if len(sys.argv) > 1 and sys.argv[1] == "--campaign":
+        render_campaigns(sys.argv[2:])
+    else:
+        main()

@@ -5,15 +5,24 @@ records on every rank of the node) and the central C4D master.  To keep the
 monitoring cost low it batches records per window and *prefilters*: healthy
 transport records are aggregated into per-edge summaries, while suspicious
 records (robust z-score above a loose local threshold) are forwarded raw.
+
+``prefilter_arrays`` is the vectorized fleet-scale equivalent: it runs the
+per-node batching + prefiltering of *every* agent in one pass over a
+struct-of-arrays window and emits the master-side merged window directly,
+producing the same per-edge medians and raw suspects as ``C4Agent.collect``
++ ``reports_to_window`` (equivalence pinned in
+tests/test_c4d_vectorized.py).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.c4d.telemetry import Heartbeat, TelemetryWindow, TransportRecord
+from repro.core.c4d.telemetry import (Heartbeat, TelemetryArrays,
+                                      TelemetryWindow, TransportRecord,
+                                      grouped_median)
 
 
 @dataclass
@@ -92,3 +101,62 @@ def reports_to_window(reports: Sequence[AgentReport],
                 t_end=s.median_wait + s.median_transfer))
         win.transports.extend(rep.raw_suspects)
     return win
+
+
+def prefilter_arrays(window: TelemetryArrays, ranks_per_node: int,
+                     suspect_z: float = 3.0,
+                     n_ranks: Optional[int] = None) -> TelemetryArrays:
+    """All agents' collect + master reassembly, vectorized (paper Fig. 4).
+
+    One pass over the struct-of-arrays window:
+
+      1. per-node robust statistics (median / MAD of the node's transfer
+         latencies) flag raw suspects above ``suspect_z``,
+      2. per-edge grouped medians become the representative summary records
+         (``t_start = median wait``, ``t_end = median wait + median
+         transfer``, bytes = total // count — the exact reassembly
+         arithmetic of ``reports_to_window``),
+      3. heartbeats pass through untouched.
+
+    Returns the merged master-side window; downstream detection on it is
+    verdict-identical to the scalar agent path.
+    """
+    n = n_ranks or window.n_ranks()
+    transfer = window.tr_transfer()
+    wait = window.tr_wait()
+    node = window.tr_src // ranks_per_node
+
+    if transfer.size:
+        # per-node median / MAD, mapped back onto each record
+        _, node_med, _, idx = grouped_median(node, transfer,
+                                             return_groups=True)
+        absdev = np.abs(transfer - node_med[idx])
+        _, node_mad = grouped_median(node, absdev)
+        mad = node_mad * 1.4826 + 1e-12
+        suspect = (transfer - node_med[idx]) / mad[idx] > suspect_z
+
+        key = window.tr_src * n + window.tr_dst
+        uk, med_t, counts, edge_of = grouped_median(key, transfer,
+                                                    return_groups=True)
+        _, med_w = grouped_median(key, wait)
+        byte_sum = np.zeros(uk.size, np.int64)
+        np.add.at(byte_sum, edge_of, window.tr_bytes)
+
+        m_src = np.r_[uk // n, window.tr_src[suspect]]
+        m_dst = np.r_[uk % n, window.tr_dst[suspect]]
+        m_bytes = np.r_[byte_sum // np.maximum(counts, 1),
+                        window.tr_bytes[suspect]]
+        m_post = np.r_[np.zeros(uk.size), window.tr_post[suspect]]
+        m_start = np.r_[med_w, window.tr_start[suspect]]
+        m_end = np.r_[med_w + med_t, window.tr_end[suspect]]
+    else:
+        m_src = m_dst = np.empty(0, np.int64)
+        m_bytes = np.empty(0, np.int64)
+        m_post = m_start = m_end = np.empty(0)
+
+    return TelemetryArrays(
+        window_id=window.window_id, comms=list(window.comms),
+        tr_src=m_src, tr_dst=m_dst, tr_bytes=m_bytes,
+        tr_post=m_post, tr_start=m_start, tr_end=m_end,
+        hb_rank=window.hb_rank, hb_seq=window.hb_seq, hb_t=window.hb_t,
+        t_begin=window.t_begin, t_end=window.t_end)

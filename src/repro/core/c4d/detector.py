@@ -17,6 +17,13 @@ Four syndromes over one telemetry window:
 All statistics are robust (median/MAD) because exactly one-or-few entries
 are anomalous by construction — the paper's key insight is that BSP traffic
 is homogeneous, so *any* deviation is a hardware symptom.
+
+The production detectors are NumPy-vectorized (whole-matrix masks instead
+of per-cell Python loops) so one analysis pass stays sub-second at
+1024-4096 ranks — the regime the Monte Carlo fleet campaigns sweep.  The
+original per-cell loops are kept verbatim as ``*_verdicts_reference``
+functions; tests/test_c4d_vectorized.py pins the vectorized detectors to
+them verdict-for-verdict on golden fault windows.
 """
 from __future__ import annotations
 
@@ -25,7 +32,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.c4d.telemetry import TelemetryWindow, delay_matrix, wait_matrix
+from repro.core.c4d.telemetry import (AnyWindow, TelemetryArrays,
+                                      TelemetryWindow, delay_matrix,
+                                      wait_matrix)
 
 # syndrome kinds
 COMM_SLOW_SRC = "comm_slow_source"
@@ -72,8 +81,34 @@ def _robust_z(values: np.ndarray) -> np.ndarray:
     return (values - med) / scale
 
 
+def _last_heartbeat_seqs(window: AnyWindow) -> Tuple[np.ndarray, np.ndarray]:
+    """(sorted ranks, last completed seq per rank) from either window form."""
+    if isinstance(window, TelemetryArrays):
+        hb_rank, hb_seq = window.hb_rank, window.hb_seq
+    else:
+        hb = window.heartbeats
+        hb_rank = np.fromiter((h.rank for h in hb), np.int64, len(hb))
+        hb_seq = np.fromiter((h.seq for h in hb), np.int64, len(hb))
+    ranks, inv = np.unique(hb_rank, return_inverse=True)
+    seqs = np.full(ranks.size, np.iinfo(np.int64).min)
+    np.maximum.at(seqs, inv, hb_seq)
+    return ranks, seqs
+
+
+def _transport_sources(window: AnyWindow) -> np.ndarray:
+    if isinstance(window, TelemetryArrays):
+        return np.unique(window.tr_src)
+    return np.unique(np.fromiter((t.src_rank for t in window.transports),
+                                 np.int64, len(window.transports)))
+
+
 class DelayMatrixDetector:
-    """Paper Fig. 6: point / row / column outliers in D[src, dst]."""
+    """Paper Fig. 6: point / row / column outliers in D[src, dst].
+
+    Vectorized: rows/columns are folded with whole-matrix reductions and
+    point outliers come from one boolean mask, so the cost is a handful of
+    O(n^2) array ops instead of n^2 Python iterations.  Pinned against
+    ``delay_verdicts_reference`` (the original per-cell loop)."""
 
     def __init__(self, cfg: DetectorConfig = DetectorConfig()):
         self.cfg = cfg
@@ -82,33 +117,31 @@ class DelayMatrixDetector:
         cfg = self.cfg
         z = _robust_z(d)
         hot = (z > cfg.mad_threshold) & np.isfinite(d)
+        obs = np.isfinite(d)
         verdicts: List[Verdict] = []
-        n = d.shape[0]
-        used_rows, used_cols = set(), set()
-        for i in range(n):
-            row = hot[i, :]
-            obs = np.isfinite(d[i, :])
-            if obs.sum() >= cfg.min_observations and row.sum() >= max(
-                    1, cfg.row_col_fraction * obs.sum()) and row.sum() >= 2:
-                verdicts.append(Verdict(COMM_SLOW_SRC, rank=i,
-                                        score=float(np.nanmax(z[i, :])),
-                                        detail=f"row {i}: {int(row.sum())}/{int(obs.sum())} hot"))
-                used_rows.add(i)
-        for j in range(n):
-            col = hot[:, j]
-            obs = np.isfinite(d[:, j])
-            if obs.sum() >= cfg.min_observations and col.sum() >= max(
-                    1, cfg.row_col_fraction * obs.sum()) and col.sum() >= 2:
-                verdicts.append(Verdict(COMM_SLOW_DST, rank=j,
-                                        score=float(np.nanmax(z[:, j])),
-                                        detail=f"col {j}: {int(col.sum())}/{int(obs.sum())} hot"))
-                used_cols.add(j)
-        for i in range(n):
-            for j in range(n):
-                if hot[i, j] and i not in used_rows and j not in used_cols:
-                    verdicts.append(Verdict(COMM_SLOW_LINK, link=(i, j),
-                                            score=float(z[i, j]),
-                                            detail=f"point ({i},{j})"))
+
+        def axis_verdicts(axis: int) -> np.ndarray:
+            hot_n = hot.sum(axis=1 - axis)
+            obs_n = obs.sum(axis=1 - axis)
+            return ((obs_n >= cfg.min_observations)
+                    & (hot_n >= np.maximum(1, cfg.row_col_fraction * obs_n))
+                    & (hot_n >= 2))
+
+        row_sel = axis_verdicts(0)
+        col_sel = axis_verdicts(1)
+        for i in np.flatnonzero(row_sel):
+            verdicts.append(Verdict(
+                COMM_SLOW_SRC, rank=int(i), score=float(np.nanmax(z[i, :])),
+                detail=f"row {i}: {int(hot[i].sum())}/{int(obs[i].sum())} hot"))
+        for j in np.flatnonzero(col_sel):
+            verdicts.append(Verdict(
+                COMM_SLOW_DST, rank=int(j), score=float(np.nanmax(z[:, j])),
+                detail=f"col {j}: {int(hot[:, j].sum())}/{int(obs[:, j].sum())} hot"))
+        points = hot & ~row_sel[:, None] & ~col_sel[None, :]
+        for i, j in np.argwhere(points):
+            verdicts.append(Verdict(COMM_SLOW_LINK, link=(int(i), int(j)),
+                                    score=float(z[i, j]),
+                                    detail=f"point ({i},{j})"))
         return verdicts
 
 
@@ -116,61 +149,143 @@ class RingWaitDetector:
     """Paper Case 2. For ring edge (i -> j): the receiver j posts its buffer
     and waits. If the edge's *transfer* is healthy but j's wait is anomalously
     long, the sender i was late into the collective => i is non-communication
-    slow (compute or data loading)."""
+    slow (compute or data loading).
+
+    Vectorized: one masked row-max over the wait z-score matrix; pinned
+    against ``ring_wait_verdicts_reference``."""
 
     def __init__(self, cfg: DetectorConfig = DetectorConfig()):
         self.cfg = cfg
 
-    def analyze(self, window: TelemetryWindow,
+    def analyze(self, window: AnyWindow,
                 n_ranks: Optional[int] = None) -> List[Verdict]:
         d = delay_matrix(window, n_ranks)
         w = wait_matrix(window, n_ranks)
         zd = _robust_z(d)
         zw = _robust_z(w)
-        verdicts: List[Verdict] = []
         hot_wait = (zw > self.cfg.mad_threshold) & np.isfinite(w)
         healthy_link = ~((zd > self.cfg.mad_threshold) & np.isfinite(d))
-        n = w.shape[0]
-        scores: Dict[int, float] = {}
-        for i in range(n):
-            for j in range(n):
-                if hot_wait[i, j] and healthy_link[i, j]:
-                    # receiver j waited on sender i over a healthy link
-                    scores[i] = max(scores.get(i, 0.0), float(zw[i, j]))
-        for rank, score in sorted(scores.items()):
-            verdicts.append(Verdict(NONCOMM_SLOW, rank=rank, score=score,
-                                    detail="receiver wait w/ healthy transfer"))
-        return verdicts
+        # receiver j waited on sender i over a healthy link => i implicated
+        mask = hot_wait & healthy_link
+        scores = np.where(mask, zw, -np.inf).max(axis=1)
+        return [Verdict(NONCOMM_SLOW, rank=int(i), score=float(scores[i]),
+                        detail="receiver wait w/ healthy transfer")
+                for i in np.flatnonzero(mask.any(axis=1))]
 
 
 class HangDetector:
-    """Progress-based hang detection from per-rank heartbeats."""
+    """Progress-based hang detection from per-rank heartbeats.
+
+    Vectorized: last-seq per rank via one ``np.maximum.at`` scatter; pinned
+    against ``hang_verdicts_reference``."""
 
     def __init__(self, cfg: DetectorConfig = DetectorConfig()):
         self.cfg = cfg
 
-    def analyze(self, window: TelemetryWindow) -> List[Verdict]:
-        if not window.heartbeats:
+    def analyze(self, window: AnyWindow) -> List[Verdict]:
+        ranks, seqs = _last_heartbeat_seqs(window)
+        if ranks.size == 0:
             return []
-        last: Dict[int, Tuple[int, float]] = {}
-        for h in window.heartbeats:
-            if h.rank not in last or h.seq > last[h.rank][0]:
-                last[h.rank] = (h.seq, h.t)
-        seqs = np.array([last[r][0] for r in sorted(last)])
-        ranks = np.array(sorted(last))
         med = np.median(seqs)
-        verdicts: List[Verdict] = []
-        for r, s in zip(ranks, seqs):
-            if med - s >= self.cfg.hang_grace:
-                # did the rank itself start any transport before stalling?
-                # yes -> it died inside the collective (communication hang);
-                # no  -> it never reached it (compute / data-loading hang)
-                had_transport = any(t.src_rank == r for t in window.transports)
-                syndrome = COMM_HANG if had_transport else NONCOMM_HANG
-                verdicts.append(Verdict(syndrome, rank=int(r),
-                                        score=float(med - s),
-                                        detail=f"seq {int(s)} vs median {med:.0f}"))
-        return verdicts
+        hung = np.flatnonzero(med - seqs >= self.cfg.hang_grace)
+        if hung.size == 0:
+            return []
+        # did the rank itself start any transport before stalling?
+        # yes -> it died inside the collective (communication hang);
+        # no  -> it never reached it (compute / data-loading hang)
+        had_transport = np.isin(ranks[hung], _transport_sources(window))
+        return [Verdict(COMM_HANG if had else NONCOMM_HANG, rank=int(r),
+                        score=float(med - s),
+                        detail=f"seq {int(s)} vs median {med:.0f}")
+                for r, s, had in zip(ranks[hung], seqs[hung], had_transport)]
+
+
+# ---------------------------------------------------------------------------
+# Scalar references — the original per-cell loops, pinned verbatim.  The
+# vectorized detectors above must reproduce these verdict-for-verdict
+# (tests/test_c4d_vectorized.py); treat any divergence as a bug in the
+# vectorized path.
+# ---------------------------------------------------------------------------
+
+def delay_verdicts_reference(d: np.ndarray,
+                             cfg: DetectorConfig = DetectorConfig()) -> List[Verdict]:
+    """Reference implementation of ``DelayMatrixDetector.analyze``."""
+    z = _robust_z(d)
+    hot = (z > cfg.mad_threshold) & np.isfinite(d)
+    verdicts: List[Verdict] = []
+    n = d.shape[0]
+    used_rows, used_cols = set(), set()
+    for i in range(n):
+        row = hot[i, :]
+        obs = np.isfinite(d[i, :])
+        if obs.sum() >= cfg.min_observations and row.sum() >= max(
+                1, cfg.row_col_fraction * obs.sum()) and row.sum() >= 2:
+            verdicts.append(Verdict(COMM_SLOW_SRC, rank=i,
+                                    score=float(np.nanmax(z[i, :])),
+                                    detail=f"row {i}: {int(row.sum())}/{int(obs.sum())} hot"))
+            used_rows.add(i)
+    for j in range(n):
+        col = hot[:, j]
+        obs = np.isfinite(d[:, j])
+        if obs.sum() >= cfg.min_observations and col.sum() >= max(
+                1, cfg.row_col_fraction * obs.sum()) and col.sum() >= 2:
+            verdicts.append(Verdict(COMM_SLOW_DST, rank=j,
+                                    score=float(np.nanmax(z[:, j])),
+                                    detail=f"col {j}: {int(col.sum())}/{int(obs.sum())} hot"))
+            used_cols.add(j)
+    for i in range(n):
+        for j in range(n):
+            if hot[i, j] and i not in used_rows and j not in used_cols:
+                verdicts.append(Verdict(COMM_SLOW_LINK, link=(i, j),
+                                        score=float(z[i, j]),
+                                        detail=f"point ({i},{j})"))
+    return verdicts
+
+
+def ring_wait_verdicts_reference(window: TelemetryWindow,
+                                 cfg: DetectorConfig = DetectorConfig(),
+                                 n_ranks: Optional[int] = None) -> List[Verdict]:
+    """Reference implementation of ``RingWaitDetector.analyze``."""
+    d = delay_matrix(window, n_ranks)
+    w = wait_matrix(window, n_ranks)
+    zd = _robust_z(d)
+    zw = _robust_z(w)
+    verdicts: List[Verdict] = []
+    hot_wait = (zw > cfg.mad_threshold) & np.isfinite(w)
+    healthy_link = ~((zd > cfg.mad_threshold) & np.isfinite(d))
+    n = w.shape[0]
+    scores: Dict[int, float] = {}
+    for i in range(n):
+        for j in range(n):
+            if hot_wait[i, j] and healthy_link[i, j]:
+                scores[i] = max(scores.get(i, 0.0), float(zw[i, j]))
+    for rank, score in sorted(scores.items()):
+        verdicts.append(Verdict(NONCOMM_SLOW, rank=rank, score=score,
+                                detail="receiver wait w/ healthy transfer"))
+    return verdicts
+
+
+def hang_verdicts_reference(window: TelemetryWindow,
+                            cfg: DetectorConfig = DetectorConfig()) -> List[Verdict]:
+    """Reference implementation of ``HangDetector.analyze``."""
+    if not window.heartbeats:
+        return []
+    last: Dict[int, Tuple[int, float]] = {}
+    for h in window.heartbeats:
+        if h.rank not in last or h.seq > last[h.rank][0]:
+            last[h.rank] = (h.seq, h.t)
+    seqs = np.array([last[r][0] for r in sorted(last)])
+    ranks = np.array(sorted(last))
+    med = np.median(seqs)
+    verdicts: List[Verdict] = []
+    for r, s in zip(ranks, seqs):
+        if med - s >= cfg.hang_grace:
+            had_transport = any(t.src_rank == r for t in window.transports)
+            syndrome = COMM_HANG if had_transport else NONCOMM_HANG
+            verdicts.append(Verdict(syndrome, rank=int(r),
+                                    score=float(med - s),
+                                    detail=f"seq {int(s)} vs median {med:.0f}"))
+    return verdicts
 
 
 class C4DDetector:
@@ -188,7 +303,7 @@ class C4DDetector:
         self.wait = RingWaitDetector(cfg)
         self.hang = HangDetector(cfg)
 
-    def analyze(self, window: TelemetryWindow,
+    def analyze(self, window: AnyWindow,
                 n_ranks: Optional[int] = None) -> List[Verdict]:
         verdicts = self.hang.analyze(window)
         if verdicts:

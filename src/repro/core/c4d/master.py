@@ -17,9 +17,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List
 
-from repro.core.c4d.agent import C4Agent, reports_to_window
+from repro.core.c4d.agent import C4Agent, prefilter_arrays, reports_to_window
 from repro.core.c4d.detector import C4DDetector, Verdict, COMM_HANG, NONCOMM_HANG
-from repro.core.c4d.telemetry import TelemetryWindow
+from repro.core.c4d.telemetry import AnyWindow, TelemetryArrays
 
 
 @dataclass
@@ -59,10 +59,19 @@ class C4DMaster:
         return rank // self.ranks_per_node
 
     # ------------------------------------------------------------------
-    def ingest(self, window: TelemetryWindow) -> List[NodeAction]:
-        """One monitoring cycle: agents -> reassembly -> detect -> act."""
-        reports = [a.collect(window) for a in self.agents]
-        merged = reports_to_window(reports, window)
+    def ingest(self, window: AnyWindow) -> List[NodeAction]:
+        """One monitoring cycle: agents -> reassembly -> detect -> act.
+
+        A ``TelemetryArrays`` window takes the vectorized fleet path (all
+        agents prefiltered in one pass); a scalar ``TelemetryWindow`` runs
+        the per-agent reference path.  Both produce identical verdicts."""
+        if isinstance(window, TelemetryArrays):
+            merged = prefilter_arrays(window, self.ranks_per_node,
+                                      suspect_z=self.agents[0].suspect_z,
+                                      n_ranks=self.n_ranks)
+        else:
+            reports = [a.collect(window) for a in self.agents]
+            merged = reports_to_window(reports, window)
         verdicts = self.detector.analyze(merged, n_ranks=self.n_ranks)
         self.offline_log.append((window.window_id, verdicts))
 

@@ -24,7 +24,8 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.c4d.telemetry import (CommunicatorInfo, Heartbeat, OpRecord,
-                                      TelemetryWindow, TransportRecord)
+                                      TelemetryArrays, TelemetryWindow,
+                                      TransportRecord)
 
 # ---------------------------------------------------------------------------
 # Taxonomy (Table 1)
@@ -65,6 +66,20 @@ class Fault:
     severity: float = 8.0         # latency multiplier / delay seconds
 
 
+def _fault_maps(faults: Sequence[Fault]):
+    """Fault list -> per-kind lookup maps, shared by both window paths so
+    the taxonomy handling cannot drift between the scalar and vectorized
+    synthesisers (their equivalence is pinned)."""
+    return (
+        {f.rank for f in faults if f.kind in ("comm_hang", "crash")},
+        {f.rank for f in faults if f.kind == "noncomm_hang"},
+        {f.rank: f.severity for f in faults if f.kind == "slow_src"},
+        {f.rank: f.severity for f in faults if f.kind == "slow_dst"},
+        {f.link: f.severity for f in faults if f.kind == "slow_link"},
+        {f.rank: f.severity for f in faults if f.kind == "straggler"},
+    )
+
+
 class RingJobTelemetry:
     """Synthetic enhanced-CCL telemetry of a BSP ring-allreduce job."""
 
@@ -92,12 +107,8 @@ class RingJobTelemetry:
         rng = self.rng
         comm = CommunicatorInfo(comm_id=0, n_ranks=n, ranks=tuple(range(n)))
         win = TelemetryWindow(window_id=window_id, comms=[comm])
-        hang_ranks = {f.rank for f in faults if f.kind in ("comm_hang", "crash")}
-        nc_hang_ranks = {f.rank for f in faults if f.kind == "noncomm_hang"}
-        slow_src = {f.rank: f.severity for f in faults if f.kind == "slow_src"}
-        slow_dst = {f.rank: f.severity for f in faults if f.kind == "slow_dst"}
-        slow_link = {f.link: f.severity for f in faults if f.kind == "slow_link"}
-        straggler = {f.rank: f.severity for f in faults if f.kind == "straggler"}
+        (hang_ranks, nc_hang_ranks, slow_src, slow_dst, slow_link,
+         straggler) = _fault_maps(faults)
 
         t = 0.0
         op_period = self.base_transfer * 2.2
@@ -150,6 +161,99 @@ class RingJobTelemetry:
             win.heartbeats.append(Heartbeat(rank=r, iteration=0, seq=0, t=op_period))
         win.t_begin, win.t_end = 0.0, self.iters * op_period
         return win
+
+    def window_arrays(self, window_id: int = 0,
+                      faults: Sequence[Fault] = ()) -> TelemetryArrays:
+        """Vectorized ``window``: same telemetry as a struct-of-arrays.
+
+        Consumes the jitter RNG stream in exactly the scalar order (per
+        iteration, per channel, per active rank: transfer draw then wait
+        draw), so a telemetry instance can interleave both paths and stay
+        reproducible; columns match ``window()`` record-for-record
+        (equivalence pinned in tests/test_c4d_vectorized.py).  This is the
+        synthesis path the Monte Carlo campaigns run at 1024+ ranks.
+        """
+        n = self.n
+        rng = self.rng
+        comm = CommunicatorInfo(comm_id=0, n_ranks=n, ranks=tuple(range(n)))
+        (hang_ranks, nc_hang_ranks, slow_src, slow_dst, slow_link,
+         straggler) = _fault_maps(faults)
+
+        op_period = self.base_transfer * 2.2
+        strides = self.channel_strides
+        S, I = len(strides), self.iters
+        act = np.array([r for r in range(n)
+                        if r not in hang_ranks and r not in nc_hang_ranks],
+                       dtype=np.int64)
+        m = act.size
+        # one draw covering every (iteration, channel, rank) cell, in the
+        # scalar loop's order: transfer jitter then wait jitter per record
+        jit = rng.standard_normal(I * S * m * 2).reshape(I, S, m, 2)
+        transfer = np.abs(self.base_transfer * (1 + self.jitter * jit[..., 0])) + 1e-6
+        wait = np.abs(self.base_wait * (1 + self.jitter * jit[..., 1]))
+
+        dst = (act[None, :] + np.asarray(strides, np.int64)[:, None]) % n  # (S, m)
+        src_mult = np.ones(n)
+        for r, sev in slow_src.items():
+            src_mult[r] = sev
+        dst_mult = np.ones(n)
+        for r, sev in slow_dst.items():
+            dst_mult[r] = sev
+        link_mult = np.ones((S, m))
+        for (a, b), sev in slow_link.items():
+            link_mult[(act[None, :] == a) & (dst == b)] = sev
+        # multiplying by exactly 1.0 is a bit-level no-op, so applying the
+        # multiplier columns unconditionally matches the scalar if-guards
+        transfer = ((transfer * src_mult[act][None, None, :])
+                    * dst_mult[dst][None, :, :]) * link_mult[None, :, :]
+        wait_add = np.zeros(n)
+        for r, sev in straggler.items():
+            wait_add[r] = self.base_transfer * sev
+        wait = wait + wait_add[act][None, None, :]
+
+        t_post = np.broadcast_to(
+            (np.arange(I) * op_period)[:, None, None], (I, S, m))
+        t_start = t_post + wait
+        t_end = t_start + transfer
+
+        tr_src = np.broadcast_to(act[None, None, :], (I, S, m)).ravel()
+        tr_dst = np.broadcast_to(dst[None, :, :], (I, S, m)).ravel()
+        op_rank = tr_src.copy()          # op layer mirrors the main loop only
+        seq_at = (np.arange(I)[:, None] * S + np.arange(S)[None, :])  # (I, S)
+        op_seq = np.broadcast_to(seq_at[:, :, None], (I, S, m)).ravel()
+
+        hb_rank = np.broadcast_to(act[None, :], (I, m)).ravel()
+        hb_seq = np.broadcast_to(((np.arange(I) + 1) * S)[:, None], (I, m)).ravel()
+        hb_t = np.broadcast_to(((np.arange(I) + 1) * op_period)[:, None],
+                               (I, m)).ravel()
+
+        # hung ranks (same trailing records as the scalar path): comm hang
+        # froze after starting the collective, non-comm hang never reached it
+        ch = list(hang_ranks)
+        nc = list(nc_hang_ranks)
+        if ch:
+            tr_src = np.r_[tr_src, np.asarray(ch, np.int64)]
+            tr_dst = np.r_[tr_dst, (np.asarray(ch, np.int64) + 1) % n]
+            t_post = np.r_[t_post.ravel(), np.zeros(len(ch))]
+            t_start = np.r_[t_start.ravel(), np.full(len(ch), self.base_wait)]
+            t_end = np.r_[t_end.ravel(),
+                          np.full(len(ch), self.base_wait + self.base_transfer)]
+        else:
+            t_post, t_start, t_end = t_post.ravel(), t_start.ravel(), t_end.ravel()
+        if ch or nc:
+            hb_rank = np.r_[hb_rank, np.asarray(ch + nc, np.int64)]
+            hb_seq = np.r_[hb_seq, np.ones(len(ch), np.int64),
+                           np.zeros(len(nc), np.int64)]
+            hb_t = np.r_[hb_t, np.full(len(ch) + len(nc), op_period)]
+
+        return TelemetryArrays(
+            window_id=window_id, comms=[comm],
+            tr_src=tr_src, tr_dst=tr_dst,
+            tr_bytes=np.full(tr_src.size, self.msg_bytes, np.int64),
+            tr_post=t_post, tr_start=t_start, tr_end=t_end,
+            hb_rank=hb_rank, hb_seq=hb_seq, hb_t=hb_t,
+            op_rank=op_rank, op_seq=op_seq,
+            t_begin=0.0, t_end=I * op_period)
 
 
 def fault_for_class(cls: ErrorClass, rank: int, n_ranks: int,

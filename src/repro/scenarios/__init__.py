@@ -10,11 +10,20 @@ Entry points:
 
   * ``repro.scenarios.library.get(name)``  — a shipped ``ScenarioSpec``
   * ``repro.scenarios.engine.CampaignEngine(spec).run()`` — one drill
+  * ``repro.scenarios.montecarlo.run_campaign(spec)`` — a Monte Carlo
+    fleet campaign (randomized trial population + statistical report,
+    docs/campaigns.md)
   * ``python -m repro.scenarios.run --list``  — the CLI
 
 ``core/downtime.py`` (Table 3) and the fig9/fig11/fig13 benchmarks are thin
 consumers of the same building blocks (``detection.DetectionHarness``,
 ``fabric.FabricState``), so this package is the single composition layer.
+
+(``repro.scenarios.montecarlo`` / ``stats`` / ``report`` are imported as
+modules, not re-exported here: ``core/downtime.py`` sits both upstream of
+the campaign statistics — baseline policies — and downstream of
+``scenarios.detection``, so the package ``__init__`` stays light to keep
+that import graph acyclic.)
 """
 from repro.scenarios.engine import CampaignEngine, run_scenario
 from repro.scenarios.spec import (Assertions, FailLink, InjectFault, JobSpec,

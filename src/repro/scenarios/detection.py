@@ -46,11 +46,20 @@ class DetectionHarness:
     confirmation state, matching the paper's per-incident analysis); the
     ``RingJobTelemetry`` instance persists so its jitter stream — and hence
     any caller's reproducibility guarantees — is preserved across faults.
+
+    Windows are synthesised and analysed on the vectorized
+    struct-of-arrays path (``RingJobTelemetry.window_arrays`` ->
+    ``C4DMaster.ingest``), which consumes the identical RNG stream and
+    produces identical verdicts to the scalar path — the Table-3 goldens
+    (tests/test_downtime_regression.py) pin this — while staying fast
+    enough for Monte Carlo campaigns at 1024+ ranks
+    (``vectorized=False`` keeps the scalar reference path available).
     """
     telemetry: RingJobTelemetry
     ranks_per_node: int = 8
     max_windows: int = 4
     window_period_s: Optional[float] = None   # default: master's 30 s
+    vectorized: bool = True
 
     def _master(self) -> C4DMaster:
         m = C4DMaster(n_ranks=self.telemetry.n, ranks_per_node=self.ranks_per_node)
@@ -70,8 +79,10 @@ class DetectionHarness:
         latency = 0.0
         actions: List[NodeAction] = []
         windows = 0
+        synth = (self.telemetry.window_arrays if self.vectorized
+                 else self.telemetry.window)
         for w in range(self.max_windows):
-            win = self.telemetry.window(window_id=w, faults=list(faults))
+            win = synth(window_id=w, faults=list(faults))
             actions = master.ingest(win)
             latency += master.window_period_s
             windows = w + 1

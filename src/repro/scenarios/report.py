@@ -1,0 +1,172 @@
+"""Campaign reports: JSON for CI artifacts, markdown for humans.
+
+A ``CampaignReport`` is the deterministic output of
+``montecarlo.run_campaign``: the campaign distribution it measured, one
+compact record per trial (each carrying its own seed), and the fleet
+aggregates of ``repro.scenarios.stats``.  ``to_json`` is byte-stable for a
+given ``CampaignSpec`` — no wall-clock, host, or ordering nondeterminism —
+which is what the seeded-determinism test and the CI artifact diff rely
+on.  ``to_markdown`` renders the same content as the paper-claim table
+plus distribution summaries (``experiments/summarize.py --campaign``
+renders saved JSON reports through the same code).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+def _fmt(x: Optional[float], nd: int = 2, suffix: str = "") -> str:
+    if x is None:
+        return "—"
+    return f"{x:.{nd}f}{suffix}"
+
+
+def _ci(block: dict, nd: int = 2, suffix: str = "") -> str:
+    if not block or block.get("mean") is None:
+        return "—"
+    return (f"{block['mean']:.{nd}f}{suffix} "
+            f"[{block['ci_lo']:.{nd}f}, {block['ci_hi']:.{nd}f}]")
+
+
+@dataclass
+class CampaignReport:
+    """Deterministic result of one Monte Carlo campaign (docs/campaigns.md).
+
+    ``campaign`` embeds the full ``CampaignSpec`` (distribution + seed),
+    ``trials`` the per-trial records of ``stats.trial_metrics`` (each with
+    the trial's engine seed), ``aggregates`` the fleet statistics of
+    ``stats.aggregate`` — detection precision/recall against injected
+    ground truth, MTTR/latency percentiles, and the paper-claim brackets
+    (abstract: 30 % error-overhead cut, 15 % comm-cost cut, 30-45 %
+    efficiency gain)."""
+    campaign: dict
+    trials: List[dict] = field(default_factory=list)
+    aggregates: dict = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {"campaign": self.campaign,
+                "name": self.campaign.get("name"),
+                "seed": self.campaign.get("seed"),
+                "n_trials": len(self.trials),
+                "trials": self.trials,
+                "aggregates": self.aggregates}
+
+    def to_markdown(self) -> str:
+        return render_markdown(self.to_json())
+
+    def summary_lines(self) -> List[str]:
+        """Console summary (the CLI's non-JSON output)."""
+        agg = self.aggregates
+        det = agg["detection"]
+        ov = agg["overhead"]
+        eff = agg["efficiency"]
+        cam = self.campaign
+        lines = [
+            f"campaign      : {cam['name']}  seed={cam['seed']}  "
+            f"trials={len(self.trials)}  gpus={cam['gpus']}",
+            f"paper ref     : {cam['paper_ref']}",
+            f"faults        : {det['n_faults']} injected | "
+            f"precision {det['precision']:.3f} | recall {det['recall']:.3f}",
+            f"det latency   : p50 {_fmt(det['latency_s']['p50'], 0)} s | "
+            f"p90 {_fmt(det['latency_s']['p90'], 0)} s | "
+            f"p99 {_fmt(det['latency_s']['p99'], 0)} s",
+            f"MTTR          : p50 {_fmt(ov['mttr_s']['p50'], 0)} s | "
+            f"p90 {_fmt(ov['mttr_s']['p90'], 0)} s | "
+            f"p99 {_fmt(ov['mttr_s']['p99'], 0)} s "
+            f"(baseline p50 {_fmt(ov['baseline_mttr_s']['p50'], 0)} s)",
+            f"goodput       : {_ci(eff['goodput_frac'], 3)} of ideal",
+            f"overhead cut  : {_ci(ov['cut_pct_points'], 1, ' pt')} "
+            f"(paper ~30 pt of month)",
+        ]
+        comm = agg["communication"]
+        if comm["ab_gain_pct"]["mean"] is not None:
+            lines.append(
+                f"comm cost cut : {_ci(comm['cost_cut_pct'], 1, ' %')} "
+                f"(paper ~15 %)")
+            lines.append(
+                f"efficiency    : {_ci(eff['gain_pct'], 1, ' %')} gain "
+                f"(paper 30-45 %) "
+                f"{'brackets paper' if eff['gain_pct']['brackets_paper'] else 'outside paper range'}")
+        return lines
+
+
+def render_markdown(rep: dict) -> str:
+    """Markdown for a campaign-report JSON dict (also used on saved files)."""
+    cam = rep["campaign"]
+    agg = rep["aggregates"]
+    det = agg["detection"]
+    ov = agg["overhead"]
+    comm = agg["communication"]
+    eff = agg["efficiency"]
+    out = [
+        f"# Campaign `{cam['name']}`",
+        "",
+        f"{cam.get('description', '')}",
+        "",
+        f"*{rep['n_trials']} trials · {cam['gpus']} simulated GPUs/trial · "
+        f"seed {cam['seed']} · paper: {cam.get('paper_ref', '')}*",
+        "",
+        "## Paper-claim brackets",
+        "",
+        "| claim | measured (95 % CI) | paper | brackets? |",
+        "|---|---|---|---|",
+        f"| error-induced overhead cut | {_ci(ov['cut_pct_points'], 1, ' pt')}"
+        f" | ~30 pt of month (Table 3) "
+        f"| {'yes' if ov['cut_pct_points']['brackets_paper'] else 'no'} |",
+        f"| communication cost cut | {_ci(comm['cost_cut_pct'], 1, ' %')} "
+        f"| ~15 % (abstract) "
+        f"| {'yes' if comm['cost_cut_pct']['brackets_paper'] else 'no'} |",
+        f"| system efficiency gain | {_ci(eff['gain_pct'], 1, ' %')} "
+        f"| 30-45 % (abstract) "
+        f"| {'yes' if eff['gain_pct']['brackets_paper'] else 'no'} |",
+        "",
+        "## Detection (vs injected ground truth)",
+        "",
+        "| metric | value |",
+        "|---|---|",
+        f"| injected faults | {det['n_faults']} |",
+        f"| true / false positives | {det['true_positives']} / "
+        f"{det['false_positives']} |",
+        f"| false negatives | {det['false_negatives']} |",
+        f"| precision | {det['precision']:.3f} |",
+        f"| recall | {det['recall']:.3f} |",
+        f"| latency p50 / p90 / p99 | {_fmt(det['latency_s']['p50'], 0)} / "
+        f"{_fmt(det['latency_s']['p90'], 0)} / "
+        f"{_fmt(det['latency_s']['p99'], 0)} s |",
+    ]
+    if det["network_events"]:
+        out.append(f"| fabric events observed | "
+                   f"{det['network_observed_rate']:.2f} "
+                   f"(edge hit {det['network_edge_hit_rate']:.2f}) |")
+    out += [
+        "",
+        "## Downtime (MTTR per fault, Table-3 phases)",
+        "",
+        "| | p50 | p90 | p99 | mean |",
+        "|---|---|---|---|---|",
+        f"| C4D | {_fmt(ov['mttr_s']['p50'], 0)} s | "
+        f"{_fmt(ov['mttr_s']['p90'], 0)} s | "
+        f"{_fmt(ov['mttr_s']['p99'], 0)} s | "
+        f"{_fmt(ov['mttr_s']['mean'], 0)} s |",
+        f"| no-C4D baseline | {_fmt(ov['baseline_mttr_s']['p50'], 0)} s | "
+        f"{_fmt(ov['baseline_mttr_s']['p90'], 0)} s | "
+        f"{_fmt(ov['baseline_mttr_s']['p99'], 0)} s | "
+        f"{_fmt(ov['baseline_mttr_s']['mean'], 0)} s |",
+        "",
+        f"Goodput fraction {_ci(eff['goodput_frac'], 3)}, downtime fraction "
+        f"{_ci(eff['downtime_frac'], 4)}.",
+        "",
+        "## Trials",
+        "",
+        "| trial | seed | faults | TP/FP/FN | goodput | A/B gain |",
+        "|---|---|---|---|---|---|",
+    ]
+    for i, t in enumerate(rep["trials"]):
+        gain = (f"{t['ab_gain_pct']:+.1f} %" if "ab_gain_pct" in t else "—")
+        out.append(
+            f"| {i} | {t['seed']} | {t['n_faults']} "
+            f"| {t['true_positives']}/{t['false_positives']}"
+            f"/{t['false_negatives']} | {t['goodput_frac']:.3f} | {gain} |")
+    out.append("")
+    return "\n".join(out)

@@ -1,15 +1,28 @@
-"""Scenario campaign CLI.
+"""Scenario + campaign CLI.
+
+Single-trial drills (one hand-scripted ``ScenarioSpec``):
 
     PYTHONPATH=src python -m repro.scenarios.run --list
     PYTHONPATH=src python -m repro.scenarios.run --scenario single_nic_down
     PYTHONPATH=src python -m repro.scenarios.run --all --json reports/
     PYTHONPATH=src python -m repro.scenarios.run --scenario ecmp_vs_c4p_ab --json -
 
+Monte Carlo campaigns (randomized trial populations, docs/campaigns.md):
+
+    PYTHONPATH=src python -m repro.scenarios.run --campaign fleet_smoke
+    PYTHONPATH=src python -m repro.scenarios.run --campaign fleet_1024 \
+        --trials 64 --gpus 1024 --workers 4 --json reports/ --md reports/
+
 Per-scenario reports carry detection latency, localisation verdicts, the
-Table-3 downtime phase breakdown, and effective goodput; ``--json`` writes
-the full machine-readable report (a file per scenario when given a
-directory, stdout with ``-``).  Exit status is non-zero when any scenario's
-spec assertions fail (CI uses this as the scenario-smoke gate).
+Table-3 downtime phase breakdown, and effective goodput; campaign reports
+carry the fleet aggregates (detection precision/recall, MTTR percentiles,
+goodput/efficiency CIs bracketing the paper's claims).  ``--json`` writes
+the machine-readable report (a file per scenario/campaign when given a
+directory, stdout with ``-``); ``--md`` additionally renders the campaign
+markdown.  ``--seed`` flows through spec factories *and* the campaign
+samplers, and is surfaced in every JSON report, so one flag fully
+determines the output.  Exit status is non-zero when any scenario's spec
+assertions fail (CI uses this as the scenario-smoke gate).
 """
 from __future__ import annotations
 
@@ -17,9 +30,10 @@ import argparse
 import json
 import os
 import sys
+import time
 from typing import List
 
-from repro.scenarios import library
+from repro.scenarios import library, montecarlo
 from repro.scenarios.engine import run_scenario
 
 
@@ -58,7 +72,7 @@ def _summary_lines(rep: dict) -> List[str]:
     return lines
 
 
-def _write_json(rep: dict, dest: str) -> None:
+def _write_json(rep: dict, dest: str, stem: str) -> None:
     if dest == "-":
         json.dump(rep, sys.stdout, indent=1, default=str)
         sys.stdout.write("\n")
@@ -66,28 +80,56 @@ def _write_json(rep: dict, dest: str) -> None:
     if dest.endswith(".json") and not os.path.isdir(dest):
         path = dest                  # explicit single-file destination
     else:
-        # anything else is a directory: one report per scenario, so
-        # multi-scenario runs never silently overwrite each other
+        # anything else is a directory: one report per scenario/campaign,
+        # so multi-target runs never silently overwrite each other
         os.makedirs(dest, exist_ok=True)
-        path = os.path.join(dest, f"{rep['scenario']}.json")
+        path = os.path.join(dest, f"{stem}.json")
     with open(path, "w") as f:
         json.dump(rep, f, indent=1, default=str)
+
+
+def _write_text(text: str, dest: str, stem: str) -> None:
+    if dest == "-":
+        sys.stdout.write(text)
+        return
+    if dest.endswith(".md") and not os.path.isdir(dest):
+        path = dest
+    else:
+        os.makedirs(dest, exist_ok=True)
+        path = os.path.join(dest, f"{stem}.md")
+    with open(path, "w") as f:
+        f.write(text)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.scenarios.run",
-        description="Run end-to-end C4 fault drills (docs/scenarios.md).")
+        description="Run end-to-end C4 fault drills and Monte Carlo "
+                    "campaigns (docs/scenarios.md, docs/campaigns.md).")
     ap.add_argument("--list", action="store_true",
-                    help="list shipped scenarios and exit")
+                    help="list shipped scenarios + campaigns and exit")
     ap.add_argument("--scenario", action="append", default=[],
                     help="scenario name (repeatable)")
     ap.add_argument("--all", action="store_true", help="run every scenario")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--campaign", action="append", default=[],
+                    help="Monte Carlo campaign name (repeatable)")
+    ap.add_argument("--trials", type=int, default=None,
+                    help="override the campaign's trial count")
+    ap.add_argument("--gpus", type=int, default=None,
+                    help="override the campaign's simulated GPUs per trial")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="process-pool width for campaign trials "
+                         "(report is identical for any value)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="seed threaded through spec factories and campaign "
+                         "samplers (default: each target's own default)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write report(s) as JSON: a *.json file, a "
-                         "directory (one file per scenario), or '-' for "
+                         "directory (one file per target), or '-' for "
                          "stdout")
+    ap.add_argument("--md", default=None, metavar="PATH",
+                    help="write campaign report(s) as markdown: a *.md "
+                         "file, a directory, or '-' for stdout")
     ap.add_argument("--no-assert", action="store_true",
                     help="report assertion failures but exit 0")
     ap.add_argument("--live", action="store_true",
@@ -101,15 +143,20 @@ def main(argv=None) -> int:
         for name in library.names():
             spec = library.get(name)
             print(f"{name:28s} {spec.paper_ref}")
+        for name in montecarlo.names():
+            cam = montecarlo.get(name)
+            print(f"{name:28s} [campaign: {cam.n_trials} trials x "
+                  f"{cam.gpus} GPUs] {cam.paper_ref}")
         return 0
 
     targets = library.names() if args.all else args.scenario
-    if not targets:
-        ap.error("nothing to do: pass --list, --scenario NAME, or --all")
+    if not targets and not args.campaign:
+        ap.error("nothing to do: pass --list, --scenario NAME, "
+                 "--campaign NAME, or --all")
 
     failed: List[str] = []
     for name in targets:
-        spec = library.get(name, seed=args.seed)
+        spec = library.get(name, seed=args.seed if args.seed is not None else 0)
         rep = run_scenario(spec)
         if args.live:
             import tempfile
@@ -118,14 +165,34 @@ def main(argv=None) -> int:
             with tempfile.TemporaryDirectory() as tmp:
                 rep["live"] = live.drive(spec, workdir=tmp,
                                          n_steps=args.live_steps)
-        if args.json != "-":
+        if args.json != "-" and args.md != "-":
+            # keep console text off stdout whenever any '-' destination
+            # owns the stream (scenario + campaign runs can share it)
             for line in _summary_lines(rep):
                 print(line)
             print()
         if args.json:
-            _write_json(rep, args.json)
+            _write_json(rep, args.json, rep["scenario"])
         if not rep["passed"]:
             failed.append(name)
+
+    for name in args.campaign:
+        cam = montecarlo.get(name, seed=args.seed, n_trials=args.trials,
+                             gpus=args.gpus)
+        t0 = time.perf_counter()
+        report = montecarlo.run_campaign(cam, workers=max(args.workers, 1))
+        wall = time.perf_counter() - t0
+        if args.json != "-" and args.md != "-":
+            for line in report.summary_lines():
+                print(line)
+            print(f"wall          : {wall:.1f} s "
+                  f"({len(report.trials)} trials, workers={args.workers})")
+            print()
+        if args.json:
+            _write_json(report.to_json(), args.json, cam.name)
+        if args.md:
+            _write_text(report.to_markdown(), args.md, cam.name)
+
     if failed and not args.no_assert:
         print(f"scenario assertions failed: {failed}", file=sys.stderr)
         return 1

@@ -1,0 +1,229 @@
+"""Campaign statistics: per-trial metric extraction + fleet aggregation.
+
+The paper's headline numbers are *fleet* statistics — a 30 % cut in
+error-induced overhead, a 15 % cut in communication cost, and a 30-45 %
+system-efficiency gain over a month of production jobs (abstract, §5,
+Table 3).  This module turns a population of scenario-engine reports into
+exactly those aggregates, with confidence intervals:
+
+  * **MTTR** — per-fault downtime (the four Table-3 phases summed:
+    detection + diagnosis&isolation + post-checkpoint + re-initialisation),
+    reported as p50/p90/p99 percentiles over every fault in the campaign.
+  * **Detection precision / recall** — scored against injected ground
+    truth.  Every ``InjectFault`` is a real positive; an outcome is a true
+    positive when the C4D pipeline acted *and* implicated the right node, a
+    false positive when it acted on the wrong component, and a false
+    negative when no action landed within the harness window budget.
+  * **Goodput / efficiency CIs** — normal-approximation confidence
+    intervals over per-trial goodput fractions and the C4P-vs-ECMP A/B
+    gain, composed into the C4-vs-baseline efficiency-gain bracket the
+    paper claims.
+
+The no-C4D counterfactual uses the Table-3 ``BASELINE_JUN23`` policy's
+expected values (30-min elastic-agent hang timeout, median manual
+diagnosis, infrequent checkpoints) so the "error-induced overhead" cut is
+computed against the same baseline the paper measures (Table 3, Jun 2023
+column).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.downtime import BASELINE_JUN23, C4D_DEC23, DAYS
+
+_HANG_KINDS = ("crash", "comm_hang", "noncomm_hang")
+MONTH_S = 30.0 * DAYS
+
+# paper targets the aggregates are bracketed against (abstract / Table 3)
+PAPER_ERROR_OVERHEAD_CUT_PCT_POINTS = 30.0
+PAPER_COMM_COST_CUT_PCT = 15.0
+PAPER_EFFICIENCY_GAIN_PCT = (30.0, 45.0)
+
+# Fraction of iteration time spent in communication for the paper's
+# large-scale jobs (§1/§2 motivation: "about 30 %" at the trailing end of
+# scaling).  The engine measures *busbw* gains; multiplying the comm-time
+# cut by this fraction converts it into the step-time cost cut the
+# abstract's "15 % reduction in communication costs" refers to.
+COMM_TIME_FRACTION = 0.3
+
+
+def baseline_fault_downtime_s(fault: dict,
+                              policy=BASELINE_JUN23) -> float:
+    """Deterministic no-C4D counterfactual downtime for one fault record.
+
+    Expected-value version of ``core/downtime.py``'s baseline policy: a
+    hang burns the elastic-agent timeout, anything else the crash-notice
+    window; diagnosis is the manual median; lost work is half the
+    infrequent checkpoint period (uniform expectation); re-initialisation
+    matches the drill's own cost."""
+    hang = fault["kind"] in _HANG_KINDS
+    det = policy.hang_timeout_s if hang else policy.crash_notice_s
+    return (det + policy.manual_diag_median_s
+            + 0.5 * policy.checkpoint_period_s
+            + fault["phases"]["re_initialization_s"])
+
+
+def trial_metrics(report: dict) -> dict:
+    """Flatten one scenario-engine report into a compact per-trial record.
+
+    Keeps everything ``aggregate`` needs (and the trial's seed, so every
+    row of a campaign report is independently reproducible) and drops the
+    heavyweight timeline/per-record payloads."""
+    det = report["detection"]
+    faults = det["faults"]
+    acted = [f for f in faults if f["acted"]]
+    tp = sum(1 for f in acted if f["localized"])
+    net = report["network"]["detections"]
+    out = {
+        "scenario": report["scenario"],
+        "seed": report["seed"],
+        "fabric": report["fabric"],
+        "duration_s": report["duration_s"],
+        "n_faults": det["n_faults"],
+        "acted": len(acted),
+        "true_positives": tp,
+        "false_positives": len(acted) - tp,
+        "false_negatives": det["n_faults"] - len(acted),
+        "detection_latencies_s": [f["detection_s"] for f in acted],
+        "mttr_s": [sum(f["phases"].values()) for f in faults],
+        "baseline_mttr_s": [baseline_fault_downtime_s(f) for f in faults],
+        "downtime_frac": report["downtime"]["fraction_of_duration"],
+        "goodput_frac": report["goodput"]["fraction"],
+        "restarts": report["restarts"],
+        "network_events": report["network"]["n_events"],
+        "network_observed": sum(1 for d in net if d["observed"]),
+        "network_edge_hits": sum(1 for d in net if d["edge_hit"]),
+    }
+    if "ab" in report:
+        out["ab_gain_pct"] = report["ab"]["gain_pct"]
+        out["c4p_effective_gbps"] = report["ab"]["c4p_effective_gbps"]
+        out["ecmp_effective_gbps"] = report["ab"]["ecmp_effective_gbps"]
+    return out
+
+
+def mean_ci(values: List[float], confidence_z: float = 1.96) -> dict:
+    """Normal-approximation mean +- z * s/sqrt(n) (95 % by default)."""
+    xs = np.asarray(values, float)
+    if xs.size == 0:
+        return {"n": 0, "mean": None, "ci_lo": None, "ci_hi": None}
+    mean = float(xs.mean())
+    half = (float(confidence_z * xs.std(ddof=1) / np.sqrt(xs.size))
+            if xs.size > 1 else 0.0)
+    return {"n": int(xs.size), "mean": mean,
+            "ci_lo": mean - half, "ci_hi": mean + half}
+
+
+def percentiles(values: List[float]) -> dict:
+    xs = np.asarray(values, float)
+    if xs.size == 0:
+        return {"n": 0, "mean": None, "p50": None, "p90": None, "p99": None}
+    return {"n": int(xs.size), "mean": float(xs.mean()),
+            "p50": float(np.percentile(xs, 50)),
+            "p90": float(np.percentile(xs, 90)),
+            "p99": float(np.percentile(xs, 99))}
+
+
+def _claim(measured: dict, paper_lo: float, paper_hi: float) -> dict:
+    """Attach a paper target to a measured CI and say whether they overlap."""
+    ok = (measured["n"] > 0
+          and measured["ci_lo"] is not None
+          and measured["ci_hi"] >= paper_lo and measured["ci_lo"] <= paper_hi)
+    return {**measured, "paper_lo": paper_lo, "paper_hi": paper_hi,
+            "brackets_paper": bool(ok)}
+
+
+def aggregate(trials: List[dict]) -> dict:
+    """Fold per-trial records into the campaign's fleet statistics.
+
+    Returns the detection-quality block (precision/recall/latency), the
+    MTTR distributions, goodput/downtime CIs, and the three paper-claim
+    brackets (error-overhead cut in percentage points of wall time, comm
+    cost cut, composite efficiency gain)."""
+    tp = sum(t["true_positives"] for t in trials)
+    fp = sum(t["false_positives"] for t in trials)
+    fn = sum(t["false_negatives"] for t in trials)
+    n_faults = sum(t["n_faults"] for t in trials)
+    lat = [x for t in trials for x in t["detection_latencies_s"]]
+    mttr = [x for t in trials for x in t["mttr_s"]]
+    base_mttr = [x for t in trials for x in t["baseline_mttr_s"]]
+    net_ev = sum(t["network_events"] for t in trials)
+    net_obs = sum(t["network_observed"] for t in trials)
+    net_hit = sum(t["network_edge_hits"] for t in trials)
+
+    # precision = TP/(TP+FP); recall = TP/(TP+FP+FN).  A mislocalized
+    # action is an FP *and* a miss of the true fault, so it sits in the
+    # denominator of both; TP+FP+FN always equals the injected-fault count.
+    detection = {
+        "n_faults": n_faults,
+        "true_positives": tp, "false_positives": fp, "false_negatives": fn,
+        "precision": tp / (tp + fp) if (tp + fp) else 1.0,
+        "recall": tp / (tp + fp + fn) if n_faults else 1.0,
+        "latency_s": percentiles(lat),
+        "network_events": net_ev,
+        "network_observed_rate": net_obs / net_ev if net_ev else None,
+        "network_edge_hit_rate": net_hit / net_ev if net_ev else None,
+    }
+
+    # -- error-induced overhead: measured C4D downtime vs the no-C4D
+    #    counterfactual, extrapolated to the paper's month at Table-3 rates
+    mttr_mean = float(np.mean(mttr)) if mttr else 0.0
+    base_mean = float(np.mean(base_mttr)) if base_mttr else 0.0
+    c4d_month_frac = C4D_DEC23.errors_per_month * mttr_mean / MONTH_S
+    base_month_frac = BASELINE_JUN23.errors_per_month * base_mean / MONTH_S
+    trial_cuts: List = []          # aligned with trials; None = no faults
+    for t in trials:
+        if not t["mttr_s"]:
+            trial_cuts.append(None)
+            continue
+        c = C4D_DEC23.errors_per_month * float(np.mean(t["mttr_s"])) / MONTH_S
+        b = (BASELINE_JUN23.errors_per_month
+             * float(np.mean(t["baseline_mttr_s"])) / MONTH_S)
+        trial_cuts.append(100.0 * (min(b, 1.0) - min(c, 1.0)))
+    overhead_cuts = [c for c in trial_cuts if c is not None]
+    overhead = {
+        "mttr_s": percentiles(mttr),
+        "baseline_mttr_s": percentiles(base_mttr),
+        "per_fault_cut_frac":
+            1.0 - mttr_mean / base_mean if base_mean else None,
+        "c4d_month_overhead_frac": c4d_month_frac,
+        "baseline_month_overhead_frac": base_month_frac,
+        "cut_pct_points": _claim(mean_ci(overhead_cuts),
+                                 PAPER_ERROR_OVERHEAD_CUT_PCT_POINTS * 0.5,
+                                 PAPER_ERROR_OVERHEAD_CUT_PCT_POINTS * 1.5),
+    }
+
+    # -- communication cost: C4P-vs-ECMP A/B arms (identical drills).  The
+    #    busbw gain g shortens the communication phase by g/(1+g); scaled
+    #    by the comm share of iteration time it becomes the step-time cost
+    #    cut the abstract quotes as "15 %".
+    gains = [t["ab_gain_pct"] for t in trials if "ab_gain_pct" in t]
+    comm_cuts = [100.0 * COMM_TIME_FRACTION * (g / (100.0 + g))
+                 for g in gains]
+    comm = {
+        "ab_gain_pct": mean_ci(gains),
+        "comm_time_fraction": COMM_TIME_FRACTION,
+        "cost_cut_pct": _claim(mean_ci(comm_cuts),
+                               PAPER_COMM_COST_CUT_PCT * 0.5,
+                               PAPER_COMM_COST_CUT_PCT * 1.5),
+    }
+
+    # -- composite efficiency, the abstract's additive framing: percentage
+    #    points of wall time recovered from error overhead plus percentage
+    #    points of step time recovered from communication
+    eff_gains = []
+    for t, cut in zip(trials, trial_cuts):
+        if "ab_gain_pct" not in t:
+            continue
+        g = t["ab_gain_pct"]
+        eff_gains.append((cut or 0.0)
+                         + 100.0 * COMM_TIME_FRACTION * (g / (100.0 + g)))
+    efficiency = {
+        "goodput_frac": mean_ci([t["goodput_frac"] for t in trials]),
+        "downtime_frac": mean_ci([t["downtime_frac"] for t in trials]),
+        "gain_pct": _claim(mean_ci(eff_gains),
+                           *PAPER_EFFICIENCY_GAIN_PCT),
+    }
+    return {"detection": detection, "overhead": overhead,
+            "communication": comm, "efficiency": efficiency}

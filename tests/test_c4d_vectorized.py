@@ -1,0 +1,198 @@
+"""Vectorized C4D path vs the pinned scalar reference.
+
+The struct-of-arrays pipeline (RingJobTelemetry.window_arrays ->
+prefilter_arrays -> vectorized detectors) must be *bit-identical* to the
+scalar dataclass pipeline on the golden fault windows: same RNG stream,
+same matrices, same verdicts, same master actions.  Any divergence is a
+bug in the vectorized path — the scalar implementations are the spec.
+"""
+import numpy as np
+import pytest
+
+from repro.core.c4d.agent import C4Agent, prefilter_arrays, reports_to_window
+from repro.core.c4d.detector import (C4DDetector, DelayMatrixDetector,
+                                     DetectorConfig, HangDetector,
+                                     RingWaitDetector,
+                                     delay_verdicts_reference,
+                                     hang_verdicts_reference,
+                                     ring_wait_verdicts_reference)
+from repro.core.c4d.master import C4DMaster
+from repro.core.c4d.telemetry import (TelemetryArrays, delay_matrix,
+                                      grouped_median, wait_matrix)
+from repro.core.faults import Fault, RingJobTelemetry
+
+N = 32
+
+# the golden windows: one per syndrome family plus compound populations
+GOLDEN_FAULTS = [
+    [],
+    [Fault("slow_src", rank=5)],
+    [Fault("slow_dst", rank=7)],
+    [Fault("slow_link", link=(3, 4))],
+    [Fault("straggler", rank=9, severity=20)],
+    [Fault("comm_hang", rank=11)],
+    [Fault("noncomm_hang", rank=2)],
+    [Fault("crash", rank=30)],
+    [Fault("comm_hang", rank=1), Fault("slow_src", rank=6)],
+    [Fault("slow_src", rank=3), Fault("slow_link", link=(10, 11)),
+     Fault("straggler", rank=20, severity=25)],
+]
+
+
+# ---------------------------------------------------------------------------
+# window synthesis: identical stream, identical columns
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("faults", GOLDEN_FAULTS)
+def test_window_arrays_bit_identical(faults):
+    a = RingJobTelemetry(n_ranks=N, seed=3)
+    b = RingJobTelemetry(n_ranks=N, seed=3)
+    ref = TelemetryArrays.from_window(a.window(0, faults))
+    vec = b.window_arrays(0, faults)
+    # both paths must consume the jitter RNG stream identically
+    assert a.rng.bit_generator.state == b.rng.bit_generator.state
+    for f in ("tr_src", "tr_dst", "tr_bytes", "tr_post", "tr_start",
+              "tr_end", "hb_rank", "hb_seq", "hb_t", "op_rank", "op_seq"):
+        x, y = getattr(ref, f), getattr(vec, f)
+        assert x.shape == y.shape and np.array_equal(x, y), f
+
+
+def test_window_arrays_interleaves_with_scalar():
+    """One telemetry instance can serve both paths alternately."""
+    a = RingJobTelemetry(n_ranks=N, seed=1)
+    b = RingJobTelemetry(n_ranks=N, seed=1)
+    fault = [Fault("slow_src", rank=4)]
+    wins_a = [a.window(0, fault), a.window(1, fault)]
+    aw0 = b.window_arrays(0, fault)
+    w1 = b.window(1, fault)
+    assert np.array_equal(TelemetryArrays.from_window(wins_a[0]).tr_end,
+                          aw0.tr_end)
+    assert np.array_equal(TelemetryArrays.from_window(wins_a[1]).tr_end,
+                          TelemetryArrays.from_window(w1).tr_end)
+
+
+def test_arrays_roundtrip():
+    tel = RingJobTelemetry(n_ranks=N, seed=0)
+    aw = tel.window_arrays(0, [Fault("slow_src", rank=5)])
+    back = TelemetryArrays.from_window(aw.to_window())
+    for f in ("tr_src", "tr_dst", "tr_bytes", "tr_post", "tr_start",
+              "tr_end", "hb_rank", "hb_seq", "hb_t"):
+        assert np.array_equal(getattr(aw, f), getattr(back, f)), f
+
+
+# ---------------------------------------------------------------------------
+# matrices + grouped median
+# ---------------------------------------------------------------------------
+
+def test_grouped_median_matches_numpy():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 40, 1000)
+    vals = rng.normal(size=1000)
+    uk, med = grouped_median(keys, vals)
+    assert np.array_equal(uk, np.unique(keys))
+    for k, m in zip(uk, med):
+        assert m == np.median(vals[keys == k])   # bit-identical, incl. even n
+
+
+@pytest.mark.parametrize("faults", GOLDEN_FAULTS)
+def test_matrices_bit_identical(faults):
+    tel = RingJobTelemetry(n_ranks=N, seed=7)
+    win = tel.window(0, faults)
+    aw = TelemetryArrays.from_window(win)
+    assert np.array_equal(delay_matrix(win, N), delay_matrix(aw, N),
+                          equal_nan=True)
+    assert np.array_equal(wait_matrix(win, N), wait_matrix(aw, N),
+                          equal_nan=True)
+    assert np.array_equal(delay_matrix(win, N, use_bandwidth=True),
+                          delay_matrix(aw, N, use_bandwidth=True),
+                          equal_nan=True)
+
+
+# ---------------------------------------------------------------------------
+# detectors vs their scalar references
+# ---------------------------------------------------------------------------
+
+def _planted_matrices():
+    rng = np.random.default_rng(42)
+    for _ in range(12):
+        n = int(rng.integers(6, 24))
+        d = rng.uniform(0.9, 1.1, (n, n))
+        d[rng.random((n, n)) < 0.3] = np.nan     # sparse observations
+        kind = rng.integers(0, 3)
+        if kind == 0:
+            d[int(rng.integers(0, n)), :] = 60.0
+        elif kind == 1:
+            d[:, int(rng.integers(0, n))] = 60.0
+        else:
+            d[int(rng.integers(0, n)), int(rng.integers(0, n))] = 60.0
+        yield d
+
+
+def test_delay_matrix_detector_matches_reference():
+    det = DelayMatrixDetector(DetectorConfig())
+    for d in _planted_matrices():
+        assert det.analyze(d) == delay_verdicts_reference(d, det.cfg)
+
+
+@pytest.mark.parametrize("faults", GOLDEN_FAULTS)
+def test_ring_wait_and_hang_match_reference(faults):
+    tel = RingJobTelemetry(n_ranks=N, seed=5)
+    win = tel.window(0, faults)
+    cfg = DetectorConfig()
+    assert RingWaitDetector(cfg).analyze(win, N) == \
+        ring_wait_verdicts_reference(win, cfg, N)
+    assert HangDetector(cfg).analyze(win) == hang_verdicts_reference(win, cfg)
+
+
+@pytest.mark.parametrize("faults", GOLDEN_FAULTS)
+def test_composite_detector_arrays_equivalent(faults):
+    tel = RingJobTelemetry(n_ranks=N, seed=9)
+    win = tel.window(0, faults)
+    aw = TelemetryArrays.from_window(win)
+    det = C4DDetector()
+    assert det.analyze(win, N) == det.analyze(aw, N)
+
+
+# ---------------------------------------------------------------------------
+# agent prefilter + full master pipeline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("faults", GOLDEN_FAULTS)
+def test_prefilter_arrays_equivalent_matrices(faults):
+    tel = RingJobTelemetry(n_ranks=N, seed=11)
+    win = tel.window(0, faults)
+    agents = [C4Agent(n, range(n * 8, (n + 1) * 8)) for n in range(N // 8)]
+    merged_ref = reports_to_window([a.collect(win) for a in agents], win)
+    merged_vec = prefilter_arrays(TelemetryArrays.from_window(win), 8,
+                                  n_ranks=N)
+    assert np.array_equal(delay_matrix(merged_ref, N),
+                          delay_matrix(merged_vec, N), equal_nan=True)
+    assert np.array_equal(wait_matrix(merged_ref, N),
+                          wait_matrix(merged_vec, N), equal_nan=True)
+
+
+@pytest.mark.parametrize("faults", GOLDEN_FAULTS)
+def test_master_actions_identical_across_paths(faults):
+    """The pinned contract: scalar and vectorized ingest agree action-for-
+    action (including confirmation-streak state across windows)."""
+    a = RingJobTelemetry(n_ranks=N, seed=5)
+    b = RingJobTelemetry(n_ranks=N, seed=5)
+    ma = C4DMaster(n_ranks=N, ranks_per_node=8)
+    mb = C4DMaster(n_ranks=N, ranks_per_node=8)
+    for wid in range(3):
+        assert ma.ingest(a.window(wid, faults)) == \
+            mb.ingest(b.window_arrays(wid, faults))
+
+
+def test_vectorized_pipeline_scales_past_scalar_sizes():
+    """Sanity at campaign scale: a 1024-rank window detects the planted
+    fault on the arrays path (wall-clock guard lives in the benchmark)."""
+    tel = RingJobTelemetry(n_ranks=1024, seed=0)
+    master = C4DMaster(n_ranks=1024, ranks_per_node=8)
+    fault = [Fault("slow_src", rank=321, severity=9.0)]
+    acts = []
+    for wid in range(3):
+        acts = master.ingest(tel.window_arrays(wid, faults=fault))
+        if acts:
+            break
+    assert acts and acts[0].node_id == 321 // 8

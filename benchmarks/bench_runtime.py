@@ -1,0 +1,78 @@
+"""Runtime kernel benchmarks: bus dispatch throughput + streaming C4D tick.
+
+Two costs bound how far the service architecture scales:
+
+  * **bus throughput** — heap push/pop + priority-ordered delivery per
+    event, measured at 1k / 10k / 100k scheduled events (the fleet_1024
+    campaign pops a few thousand events per trial, so six-figure event
+    counts leave ample headroom);
+  * **streaming tick** — one always-on C4D monitoring window (vectorized
+    telemetry synthesis + master ingest) at 1024 ranks, the per-tick cost
+    that motivates the coarser ``streaming_tick_s`` on large campaigns.
+
+Rows: ``runtime/bus_<n> , us_per_event , events_per_s`` and
+``runtime/stream_tick_<ranks> , us_per_tick , ms_per_window``.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core.c4d.master import C4DMaster
+from repro.core.faults import RingJobTelemetry
+from repro.runtime import EventBus, Service
+
+
+class _Counter(Service):
+    name = "counter"
+
+    def __init__(self):
+        self.n = 0
+
+    def on_event(self, event):
+        self.n += 1
+
+
+def bench_bus(n_events: int, n_services: int = 3) -> None:
+    bus = EventBus()
+    svcs = []
+    for i in range(n_services):
+        svc = _Counter()
+        svc.name = f"counter{i}"
+        svc.priority = i
+        svcs.append(bus.register(svc))
+    bus.start(float(n_events + 1))
+    for i in range(n_events):
+        bus.schedule(float(i), i)
+    t0 = time.perf_counter()
+    bus.drain()
+    dt = time.perf_counter() - t0
+    bus.stop()
+    assert all(s.n == n_events for s in svcs)
+    emit(f"runtime/bus_{n_events}", dt / n_events * 1e6,
+         {"events_per_s": f"{n_events / dt:.0f}",
+          "services": n_services})
+
+
+def bench_stream_tick(n_ranks: int, repeats: int) -> None:
+    tel = RingJobTelemetry(n_ranks=n_ranks, seed=3)
+    master = C4DMaster(n_ranks=n_ranks, ranks_per_node=8)
+    master.ingest(tel.window_arrays(0))          # warmup
+    t0 = time.perf_counter()
+    for i in range(repeats):
+        master.ingest(tel.window_arrays(i + 1))
+    dt = (time.perf_counter() - t0) / repeats
+    emit(f"runtime/stream_tick_{n_ranks}", dt * 1e6,
+         {"ms_per_window": f"{dt * 1e3:.2f}",
+          "windows_per_s": f"{1.0 / dt:.1f}"})
+
+
+def run(quick: bool = False) -> None:
+    for n in (1_000, 10_000, 100_000):
+        bench_bus(n)
+    for n_ranks, repeats in ((64, 30), (1024, 5 if quick else 20)):
+        bench_stream_tick(n_ranks, repeats)
+
+
+if __name__ == "__main__":
+    run()

@@ -19,6 +19,7 @@ import traceback
 from benchmarks import common
 
 BENCHES = [
+    ("runtime", "benchmarks.bench_runtime"),
     ("netsim", "benchmarks.bench_netsim_engine"),
     ("table3", "benchmarks.bench_table3_downtime"),
     ("fig2", "benchmarks.bench_fig2_scalability"),

@@ -21,4 +21,5 @@ if [[ "${1:-}" == "--json" ]]; then
 fi
 
 python -m benchmarks.run --quick --only netsim
+python -m benchmarks.run --quick --only runtime
 python -m benchmarks.run --quick "${json_args[@]+"${json_args[@]}"}"

@@ -36,10 +36,14 @@ class C4DMaster:
     ``window_period_s`` realises the paper's "detection in tens of seconds";
     slow syndromes additionally wait ``confirm_windows`` consecutive
     confirmations before a node is isolated (transients clear the streak),
-    while hangs act immediately — the job is already stopped.  Driven by
-    ``scenarios.detection.DetectionHarness`` in every fault drill
-    (campaign engine, Table-3 simulation) and by the Trainer's
-    ``_handle_fault`` loop on live runs."""
+    while hangs act immediately — the job is already stopped.  Three
+    consumers drive it: ``scenarios.detection.DetectionHarness`` builds a
+    fresh master per fault (campaign reference path, Table-3 simulation),
+    ``scenarios.services.C4DService`` keeps ONE master ingesting a window
+    per kernel tick (the always-on streaming path — the per-node
+    ``_pending`` confirmation streaks then persist across the whole run,
+    which is the intended always-on semantics), and the Trainer's
+    ``_handle_fault`` loop feeds it on live runs."""
     n_ranks: int
     ranks_per_node: int = 8
     detector: C4DDetector = field(default_factory=C4DDetector)

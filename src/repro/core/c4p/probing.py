@@ -59,6 +59,18 @@ class LinkHealthMonitor:
     'allowing it to identify and exclude faulty links from being considered
     in future path allocations'.
 
+    Two blacklist populations with different lifecycles:
+
+      * **probe-derived** — replaced wholesale by every probe sweep, so a
+        link is marked *down* when a probe finds it faulty and marked *up*
+        again as soon as a later sweep sees it healthy (the paper's
+        continuous full-mesh probing re-admits repaired links);
+      * **transport-error-derived** — reported by the CCL / C4D verdicts
+        and *sticky*: a link that corrupted live traffic stays cataloged
+        until operators repair it out of band, even if probes pass.
+
+    ``blacklist`` is the union the allocator and load balancer consult.
+
     ``usable_spines`` is memoized per (src_leaf, dst_leaf) and invalidated
     by version counters (blacklist edits here, fail/restore on the topology)
     — the allocator calls it once per connection port, which at 1024-GPU
@@ -66,17 +78,28 @@ class LinkHealthMonitor:
 
     def __init__(self, topo: ClosTopology):
         self.topo = topo
-        self.blacklist: Set[LinkId] = set()
+        self._probe_down: Set[LinkId] = set()
+        self._error_down: Set[LinkId] = set()
         self._version = 0
         self._spine_cache: Dict[Tuple[int, int], Tuple[Tuple[int, int], List[int]]] = {}
 
+    @property
+    def blacklist(self) -> Set[LinkId]:
+        """Every link currently excluded from path allocation."""
+        return self._probe_down | self._error_down
+
     def update_from_probe(self, report: ProbeReport) -> None:
-        self.blacklist |= report.faulty_links
-        self._version += 1
+        """Fold one probe sweep in: mark-down newly faulty links AND
+        mark-up links the sweep proved healthy again."""
+        new = set(report.faulty_links)
+        if new != self._probe_down:
+            self._probe_down = new
+            self._version += 1
 
     def report_transport_error(self, link: LinkId) -> None:
-        self.blacklist.add(link)
-        self._version += 1
+        if link not in self._error_down:
+            self._error_down.add(link)
+            self._version += 1
 
     def usable_spines(self, src_leaf: int, dst_leaf: int) -> List[int]:
         ver = (self._version, self.topo._health_version)
@@ -84,13 +107,14 @@ class LinkHealthMonitor:
         if hit is not None and hit[0] == ver:
             return hit[1]
         out = []
+        probe_down, error_down = self._probe_down, self._error_down
         for s in range(self.topo.n_spines):
-            if ("ls", src_leaf, s) in self.blacklist:
+            up, down = ("ls", src_leaf, s), ("sl", s, dst_leaf)
+            if up in probe_down or up in error_down:
                 continue
-            if ("sl", s, dst_leaf) in self.blacklist:
+            if down in probe_down or down in error_down:
                 continue
-            if not (self.topo.healthy(("ls", src_leaf, s))
-                    and self.topo.healthy(("sl", s, dst_leaf))):
+            if not (self.topo.healthy(up) and self.topo.healthy(down)):
                 continue
             out.append(s)
         self._spine_cache[(src_leaf, dst_leaf)] = (ver, out)

@@ -32,10 +32,8 @@ import numpy as np
 
 from repro.core.cluster import SimCluster, SteeringService
 from repro.core.faults import RingJobTelemetry, sample_error_class
+from repro.core.phases import DAYS, HOURS, PHASE_LABELS
 from repro.scenarios.detection import DetectionHarness
-
-HOURS = 3600.0
-DAYS = 24 * HOURS
 
 
 @dataclass
@@ -84,10 +82,10 @@ class DowntimeReport:
     def fractions(self) -> Dict[str, float]:
         m = self.month_s
         return {
-            "post_checkpoint": self.post_checkpoint_s / m,
-            "detection": self.detection_s / m,
-            "diagnosis_isolation": self.diagnosis_s / m,
-            "re_initialization": self.reinit_s / m,
+            PHASE_LABELS["post_checkpoint_s"]: self.post_checkpoint_s / m,
+            PHASE_LABELS["detection_s"]: self.detection_s / m,
+            PHASE_LABELS["diagnosis_isolation_s"]: self.diagnosis_s / m,
+            PHASE_LABELS["re_initialization_s"]: self.reinit_s / m,
             "total": self.total_s / m,
         }
 

@@ -1,0 +1,151 @@
+"""Deterministic heap-based event bus — the runtime kernel's scheduler.
+
+One ``EventBus`` owns the virtual clock, a seeded RNG shared by its
+services, and a binary-heap timeline.  Two delivery channels:
+
+  * ``schedule(t, event)`` — timed delivery: the event is popped when the
+    clock reaches ``t`` and handed to every service's ``on_event``.
+  * ``publish(event)`` — immediate synchronous delivery at the current
+    clock time: the full service chain runs before ``publish`` returns, so
+    a causal cascade (fault -> detection -> isolation accounting) completes
+    atomically within one timestamp, exactly like a nested function call —
+    but with the stages living in separate services.
+
+Ordering is fully deterministic and independent of registration order:
+
+  * heap entries sort by ``(t, lane, seq)`` — time first, then lane
+    (scheduled events before ticks at the same instant), then a
+
+    monotonically increasing sequence number (FIFO among ties);
+  * within a delivery, services run in ``(priority, name)`` order
+    (``runtime.service.Service``).
+
+The trace records every delivery (scheduled, published, tick) and is the
+bit-identical artifact the determinism drill compares; see
+docs/runtime.md for the full contract.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime.clock import VirtualClock
+from repro.runtime.service import Service
+
+LANE_EVENT = 0   # scheduled events run before ...
+LANE_TICK = 1    # ... service ticks at the same timestamp
+
+
+class EventBus:
+    """Single-run deterministic kernel: register services, feed events, run."""
+
+    def __init__(self, seed: int = 0, clock: Optional[VirtualClock] = None):
+        self.clock = clock or VirtualClock()
+        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.services: List[Service] = []
+        self.trace: List[dict] = []
+        self._heap: List[Tuple[float, int, int, Any]] = []
+        self._seq = 0
+        self._started = False
+
+    # ---- composition -------------------------------------------------------
+    def register(self, service: Service) -> Service:
+        if self._started:
+            raise RuntimeError("cannot register services after start()")
+        if any(s.name == service.name for s in self.services):
+            raise ValueError(f"duplicate service name {service.name!r}")
+        self.services.append(service)
+        # (priority, name) order — registration order must never matter
+        self.services.sort(key=lambda s: (s.priority, s.name))
+        return service
+
+    def service(self, name: str) -> Service:
+        for s in self.services:
+            if s.name == name:
+                return s
+        raise KeyError(f"no service named {name!r}")
+
+    # ---- event channels ----------------------------------------------------
+    def _push(self, t: float, lane: int, payload: Any) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, lane, self._seq, payload))
+
+    def schedule(self, t: float, event: Any) -> None:
+        """Timed delivery when the clock reaches ``t``."""
+        if t < self.clock.now:
+            raise ValueError(f"cannot schedule into the past: {t} < {self.clock.now}")
+        self._push(t, LANE_EVENT, event)
+
+    def publish(self, event: Any) -> None:
+        """Immediate synchronous delivery at the current clock time."""
+        self._deliver(event, kind="publish")
+
+    def _deliver(self, event: Any, kind: str) -> None:
+        self.trace.append({"t": self.clock.now, "kind": kind, "event": event})
+        for svc in self.services:
+            svc.on_event(event)
+
+    # ---- run loop ----------------------------------------------------------
+    def start(self, until: float) -> None:
+        """Start services (priority order) and arm their tick trains."""
+        if self._started:
+            raise RuntimeError("start() called twice")
+        self._started = True
+        self._until = until
+        for svc in self.services:
+            svc.on_start(self)
+        for svc in self.services:
+            if svc.tick_period_s > 0:
+                first = self.clock.now + svc.tick_period_s
+                if first <= until:
+                    self._push(first, LANE_TICK, svc)
+
+    def drain(self) -> None:
+        """Pop until the heap is empty or the horizon is crossed; anything
+        scheduled past the horizon (e.g. a restart completing after the
+        scenario ends) is dropped, matching the engine's historic
+        semantics."""
+        until = self._until
+        while self._heap:
+            t, lane, _, payload = heapq.heappop(self._heap)
+            if t > until:
+                break
+            self.clock.advance(t)
+            if lane == LANE_TICK:
+                svc = payload
+                self.trace.append({"t": t, "kind": "tick", "event": svc.name})
+                svc.on_tick(t)
+                nxt = t + svc.tick_period_s
+                if svc.tick_period_s > 0 and nxt <= until:
+                    self._push(nxt, LANE_TICK, svc)
+            else:
+                self._deliver(payload, kind="event")
+
+    def stop(self) -> None:
+        """Advance to the horizon and run ``on_stop`` in service order."""
+        self.clock.advance(self._until)
+        for svc in self.services:
+            svc.on_stop()
+
+    def run(self, until: float) -> None:
+        self.start(until)
+        self.drain()
+        self.stop()
+
+    # ---- introspection -----------------------------------------------------
+    def trace_lines(self) -> List[str]:
+        """The delivery trace as stable strings (the determinism artifact).
+
+        Events render via their ``trace_label`` attribute when they define
+        one, else ``repr`` — domain events with bulky payloads (e.g. a full
+        rate result) define ``trace_label`` to keep the trace compact while
+        staying bit-stable."""
+        out = []
+        for rec in self.trace:
+            ev = rec["event"]
+            label = getattr(ev, "trace_label", None) or repr(ev)
+            out.append(f"{rec['t']:.6f} {rec['kind']} {label}")
+        return out

@@ -2,10 +2,13 @@
 
 ``DetectionHarness`` runs the *real* detection pipeline (telemetry window
 synthesis -> C4a agents -> C4D master) for one injected fault and returns
-the measured latency and localisation verdict.  It is the single detection
-path shared by
+the measured latency and localisation verdict.  It is the single
+per-fault reference path shared by
 
-  * the campaign engine (``scenarios.engine``) — against the live fabric,
+  * ``scenarios.services.C4DService`` — the campaign engine's detection
+    service, against the live fabric (its *always-on streaming* sibling
+    runs a persistent master on the kernel clock; the harness stays the
+    agreeing reference that drives isolation and pins the goldens),
   * the Table-3 month simulation (``core/downtime.py``) — per sampled error.
 
 ``bridge_faults`` translates live netsim state (per-connection rate drops

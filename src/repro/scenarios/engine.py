@@ -1,395 +1,100 @@
-"""Event-driven campaign engine: the C4 loop on one shared virtual clock.
+"""Campaign engine: a thin composition root over the runtime kernel.
 
-One ``CampaignEngine`` run drives, per the paper's Fig. 1/3 composition:
+One ``CampaignEngine`` run interprets a ``ScenarioSpec`` by registering the
+scenario services (``repro.scenarios.services``) on a deterministic
+``repro.runtime.EventBus`` sharing one virtual clock:
 
-  1. the live fabric (``scenarios.fabric.FabricState`` over ``core/netsim``):
-     job registration, link failures, C4P re-planning, per-job busbw;
-  2. telemetry synthesis + real C4D detection per fault
-     (``scenarios.detection.DetectionHarness`` over ``core/faults`` and
-     ``core/c4d``) — fabric degradation reaches the detectors through the
-     netsim->telemetry bridge, not sampled constants;
-  3. isolation and backup swap (``core/cluster.SteeringService``);
-  4. checkpoint-restart accounting in the paper's Table-3 phases
-     (detection / diagnosis&isolation / post-checkpoint lost work /
-     re-initialisation) with Gemini-style periodic checkpoints.
+  * ``DowntimeService`` — goodput integral + Table-3 phase accounting;
+  * ``FabricService`` — live fabric (C4P/ECMP) with probe-driven re-planning;
+  * ``C4DService`` — per-fault reference detection *and* the always-on
+    streaming detector (measured latency, fault-free false-positive rate).
 
-Goodput is integrated on the virtual clock: a focus job accumulates
-``busbw * dt`` while healthy, rolls back to its last checkpoint on a fault,
-and resumes after the restart completes — so the report's goodput fraction
-reflects detection latency, restart cost, *and* fabric quality in one
-number (the paper's 30-45 % recovered-efficiency claim is exactly this
-composite).
+The root only parses the spec, admits the initial jobs, schedules the
+event script, runs the bus, and assembles the services' report fragments —
+all behaviour lives in the services (docs/runtime.md, docs/scenarios.md).
 """
 from __future__ import annotations
 
-import heapq
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, List, Optional
 
 import numpy as np
 
-from repro.core.cluster import SimCluster, SteeringService
-from repro.core.faults import TABLE1, Fault, RingJobTelemetry, fault_for_class
-from repro.core.topology import ClosTopology
-from repro.scenarios.detection import (DetectionHarness, bridge_faults)
-from repro.scenarios.fabric import FabricState
-from repro.scenarios.spec import (Event, FailLink, InjectFault, JobSpec,
-                                  RestoreLink, ScenarioSpec, StartJob,
-                                  StopJob, evaluate_assertions)
-
-HOURS = 3600.0
-ERROR_CLASSES = {c.name: c for c in TABLE1}
-_DEFAULT_SEVERITY = {"slow_src": 8.0, "slow_dst": 8.0, "slow_link": 8.0,
-                     "straggler": 20.0}
+from repro.runtime import EventBus, Service
+from repro.scenarios.services import (C4DService, DowntimeService,
+                                      FabricService, JobAdmitted, RunContext)
+from repro.scenarios.spec import Event, ScenarioSpec, evaluate_assertions
 
 
-@dataclass
-class _JobRun:
-    """Mutable per-job campaign state."""
-    spec: JobSpec
-    start_t: float
-    up: bool = True
-    busbw: float = 0.0
-    healthy_busbw: float = 0.0
-    baseline_conn: Dict[Tuple, float] = field(default_factory=dict)
-    host_to_rank: Dict[int, int] = field(default_factory=dict)
-    progress_gb: float = 0.0
-    ckpt_progress_gb: float = 0.0
-    last_ckpt_t: float = 0.0
-    end_t: Optional[float] = None
-    pending: List[InjectFault] = field(default_factory=list)
+def build_services(ctx: RunContext) -> List[Service]:
+    """The standard service set (delivery order is by priority, so callers
+    may register these in any order without changing the run)."""
+    return [DowntimeService(ctx), FabricService(ctx), C4DService(ctx)]
 
 
 class CampaignEngine:
     """Interprets one ``ScenarioSpec`` (optionally overriding the fabric
     mode, for A/B variants) and produces the JSON-ready report dict."""
 
-    def __init__(self, spec: ScenarioSpec, fabric_mode: Optional[str] = None):
+    def __init__(self, spec: ScenarioSpec, fabric_mode: Optional[str] = None,
+                 service_factory: Optional[
+                     Callable[[RunContext], List[Service]]] = None):
         self.spec = spec
         self.mode = fabric_mode or spec.fabric
-        self.rng = np.random.default_rng(spec.seed)
-        topo = ClosTopology(n_hosts=spec.n_hosts,
-                            oversubscription=spec.oversubscription)
-        self.fabric = FabricState(topo, mode=self.mode,
-                                  qps_per_port=spec.qps_per_port,
-                                  seed=spec.seed)
-        self.cluster = SimCluster(n_active=spec.n_nodes,
-                                  n_backup=max(2, spec.n_nodes // 8))
-        self.steering = SteeringService(self.cluster)
-        self.telemetry = RingJobTelemetry(n_ranks=spec.telemetry_ranks,
-                                          seed=spec.seed + 1)
-        self.harness = DetectionHarness(self.telemetry,
-                                        ranks_per_node=spec.ranks_per_node)
-        self.jobs: Dict[int, _JobRun] = {}
-        # report accumulators
-        self.phases = {"detection_s": 0.0, "diagnosis_isolation_s": 0.0,
-                       "post_checkpoint_s": 0.0, "re_initialization_s": 0.0}
-        self.fault_records: List[dict] = []
-        self.network_records: List[dict] = []
-        self.timeline: List[dict] = []
-        self.restarts = 0
-        self.clock = 0.0
-
-    # ------------------------------------------------------------------
-    # job lifecycle
-    # ------------------------------------------------------------------
-    def _register_job(self, jspec: JobSpec, t: float) -> None:
-        self.fabric.add_job(jspec.job_id, list(jspec.hosts))
-        run = _JobRun(jspec, start_t=t, last_ckpt_t=t)
-        n_hosts = max(len(jspec.hosts), 1)
-        step = max(self.spec.telemetry_ranks // n_hosts, 1)
-        run.host_to_rank = {h: i * step for i, h in enumerate(jspec.hosts)}
-        self.jobs[jspec.job_id] = run
-        self._reevaluate(first_for=jspec.job_id)
-
-    def _reevaluate(self, first_for: Optional[int] = None) -> None:
-        """Refresh every job's busbw from the live fabric; on first
-        evaluation for a job, snapshot its healthy baseline (the reference
-        the telemetry bridge and goodput ideal are measured against)."""
-        if not self.jobs:
-            return
-        res = self.fabric.evaluate(seed=self.spec.seed)
-        for j, run in self.jobs.items():
-            run.busbw = self.fabric.job_busbw(res, j)
-            if j == first_for or not run.baseline_conn:
-                run.healthy_busbw = run.busbw
-                run.baseline_conn = {k: v for k, v in res.conn_rate.items()
-                                     if k[0] == j}
-        self._last_result = res
-
-    # ------------------------------------------------------------------
-    # clock
-    # ------------------------------------------------------------------
-    def _advance(self, to_t: float) -> None:
-        """Move the virtual clock, integrating goodput and taking periodic
-        checkpoints for every healthy job."""
-        period = self.spec.checkpoint_period_s
-        for run in self.jobs.values():
-            t0 = self.clock
-            if not run.up:
-                continue
-            cur = t0
-            while run.last_ckpt_t + period <= to_t:
-                c = run.last_ckpt_t + period
-                run.progress_gb += run.busbw * (c - cur)
-                run.ckpt_progress_gb = run.progress_gb
-                run.last_ckpt_t = c
-                cur = c
-            run.progress_gb += run.busbw * (to_t - cur)
-        self.clock = to_t
-
-    # ------------------------------------------------------------------
-    # event handlers
-    # ------------------------------------------------------------------
-    def _telemetry_fault(self, ev: InjectFault) -> Tuple[Fault, int]:
-        """Instantiate the enhanced-CCL signature for an InjectFault event.
-        Returns (fault, expected_node) with ground truth for localisation."""
-        n = self.telemetry.n
-        rank = ev.rank if ev.rank is not None else int(self.rng.integers(0, n))
-        if ev.error_class is not None:
-            cls = ERROR_CLASSES[ev.error_class]
-            fault = fault_for_class(cls, rank, n, self.rng)
-        else:
-            kind = ev.kind or "crash"
-            sev = ev.severity if ev.severity is not None \
-                else _DEFAULT_SEVERITY.get(kind, 8.0)
-            if kind == "slow_link":
-                fault = Fault(kind, link=(rank, (rank + 1) % n), severity=sev)
-            else:
-                fault = Fault(kind, rank=rank, severity=sev)
-        return fault, rank // self.spec.ranks_per_node
-
-    def _bridge_for(self, run: _JobRun,
-                    result=None) -> Tuple[List[Fault], List[Tuple[int, int]]]:
-        res = result if result is not None else self._last_result
-        current = {k: v for k, v in res.conn_rate.items()
-                   if k[0] == run.spec.job_id}
-        return bridge_faults(run.baseline_conn, current, run.host_to_rank,
-                             self.telemetry.n,
-                             threshold=self.spec.bridge_threshold)
-
-    def _on_fault(self, ev: InjectFault) -> None:
-        run = self.jobs.get(ev.job_id)
-        if run is None:
-            return
-        if not run.up:
-            # fault during restart: manifests as soon as the job is back
-            run.pending.append(ev)
-            return
-        t = self.clock
-        spec = self.spec
-        fault, expected_node = self._telemetry_fault(ev)
-        extra, _ = self._bridge_for(run)      # live fabric context, if any
-        out = self.harness.detect_faults([fault] + extra,
-                                         expected_node=expected_node)
-        if (out.acted and spec.apply_localization_ceiling
-                and ev.error_class is not None
-                and self.rng.random() > ERROR_CLASSES[ev.error_class].localization_rate):
-            out.localized = False
-
-        det_s = out.detection_s
-        if out.localized:
-            node = out.node % spec.n_nodes
-            _, steer_s = self.steering.execute(node, t=t,
-                                               reason=fault.kind)
-            diag_s = steer_s + float(self.rng.uniform(2 * 60, 8 * 60))
-        else:
-            diag_s = float(np.clip(
-                self.rng.lognormal(np.log(spec.assisted_diag_median_s), 0.6),
-                5 * 60, 4 * HOURS))
-        post_ckpt_s = t - run.last_ckpt_t
-        reinit_s = spec.reinit_s
-
-        self.phases["detection_s"] += det_s
-        self.phases["diagnosis_isolation_s"] += diag_s
-        self.phases["post_checkpoint_s"] += post_ckpt_s
-        self.phases["re_initialization_s"] += reinit_s
-
-        run.progress_gb = run.ckpt_progress_gb          # lost work rolls back
-        run.up = False
-        down_until = t + det_s + diag_s + reinit_s
-        self._push(down_until, ("restart", ev.job_id))
-        self.restarts += 1
-        self.fault_records.append({
-            "t": t, "job_id": ev.job_id,
-            "error_class": ev.error_class, "kind": fault.kind,
-            "rank": fault.rank if fault.rank is not None else list(fault.link or ()),
-            "acted": out.acted, "localized": out.localized,
-            "windows": out.windows, "detection_s": det_s,
-            "syndromes": list(out.syndromes),
-            "expected_node": expected_node,
-            "phases": {"detection_s": det_s, "diagnosis_isolation_s": diag_s,
-                       "post_checkpoint_s": post_ckpt_s,
-                       "re_initialization_s": reinit_s},
-            "resume_t": down_until,
-        })
-
-    def _on_restart(self, job_id: int) -> None:
-        run = self.jobs.get(job_id)
-        if run is None:
-            return
-        run.up = True
-        run.last_ckpt_t = self.clock       # restored state == fresh checkpoint
-        run.ckpt_progress_gb = run.progress_gb
-        pending, run.pending = run.pending, []
-        for ev in pending:
-            self._on_fault(ev)
-
-    def _on_link_event(self, ev: Event) -> None:
-        """Fabric flap: update netsim health, re-plan, and run a C4D sweep
-        over the bridge so the report records whether the degradation was
-        *observed* (network faults are healed by C4P re-routing / blacklist,
-        not by node isolation — paper §3.2)."""
-        failing = isinstance(ev, FailLink)
-        if failing:
-            self.fabric.fail_link(ev.link)
-        else:
-            self.fabric.restore_link(ev.link)
-        if failing:
-            # transient state, before the control plane reacts: dead QPs
-            # stall their connections — this is what the enhanced CCL sees
-            # during the first monitoring window(s)
-            if self.mode == "c4p":
-                transient = self.fabric.evaluate(
-                    dynamic_lb=False, static_failover=False,
-                    seed=self.spec.seed)
-            else:
-                transient = self.fabric.evaluate(seed=self.spec.seed)
-            for run in self.jobs.values():
-                if not run.spec.focus or not run.up:
-                    continue
-                faults, truth = self._bridge_for(run, transient)
-                if not faults:
-                    continue
-                out = self.harness.detect_faults(faults)
-                hit = bool(set(out.links) & set(truth)) if out.acted else False
-                if out.acted:
-                    self.fabric.blacklist_link(ev.link)
-                self.network_records.append({
-                    "t": self.clock, "job_id": run.spec.job_id,
-                    "event": type(ev).__name__, "link": list(ev.link),
-                    "observed": out.acted, "edge_hit": hit,
-                    "detection_s": out.detection_s, "windows": out.windows,
-                    "syndromes": list(out.syndromes),
-                    "transient_busbw_gbps":
-                        self.fabric.job_busbw(transient, run.spec.job_id),
-                })
-        # steady state after C4P re-planning (ECMP: rates stay degraded)
-        self._reevaluate()
-
-    def _on_start_job(self, ev: StartJob) -> None:
-        self._register_job(JobSpec(ev.job_id, tuple(ev.hosts), focus=False),
-                           self.clock)
-
-    def _on_stop_job(self, ev: StopJob) -> None:
-        run = self.jobs.pop(ev.job_id, None)
-        if run is None:
-            return
-        run.end_t = self.clock
-        self.fabric.remove_job(ev.job_id)
-        self._reevaluate()
-        self._finished.append(run)
-
-    # ------------------------------------------------------------------
-    def _push(self, t: float, item) -> None:
-        self._seq += 1
-        heapq.heappush(self._queue, (t, self._seq, item))
+        self.kernel = EventBus(seed=spec.seed)
+        self.ctx = RunContext(spec, self.mode, self.kernel.rng)
+        for svc in (service_factory or build_services)(self.ctx):
+            self.kernel.register(svc)
 
     def run(self) -> dict:
-        spec = self.spec
-        self._queue: List = []
-        self._seq = 0
-        self._finished: List[_JobRun] = []
+        spec, kernel = self.spec, self.kernel
+        kernel.start(spec.duration_s)
         for js in spec.jobs:
-            self._register_job(js, 0.0)
+            kernel.publish(JobAdmitted(js))
         for ev in spec.sorted_events():
-            self._push(ev.t, ("event", ev))
-
-        while self._queue:
-            t, _, item = heapq.heappop(self._queue)
-            if t > spec.duration_s:
-                break          # past the horizon (e.g. a restart completing)
-            self._advance(t)
-            kind, payload = item
-            if kind == "restart":
-                self._on_restart(payload)
-                continue
-            ev = payload
-            self.timeline.append({"t": t, "type": type(ev).__name__,
-                                  **{k: (list(v) if isinstance(v, tuple) else v)
-                                     for k, v in ev.__dict__.items() if k != "t"}})
-            if isinstance(ev, InjectFault):
-                self._on_fault(ev)
-            elif isinstance(ev, (FailLink, RestoreLink)):
-                self._on_link_event(ev)
-            elif isinstance(ev, StartJob):
-                self._on_start_job(ev)
-            elif isinstance(ev, StopJob):
-                self._on_stop_job(ev)
-        self._advance(spec.duration_s)
+            kernel.schedule(ev.t, ev)
+        kernel.drain()
+        kernel.stop()
         return self._report()
 
     # ------------------------------------------------------------------
+    def _timeline(self) -> List[dict]:
+        return [{"t": rec["t"], "type": type(rec["event"]).__name__,
+                 **{k: (list(v) if isinstance(v, tuple) else v)
+                    for k, v in rec["event"].__dict__.items() if k != "t"}}
+                for rec in self.kernel.trace
+                if rec["kind"] == "event" and isinstance(rec["event"], Event)]
+
     def _report(self) -> dict:
         spec = self.spec
-        runs = list(self.jobs.values()) + self._finished
-        focus = [r for r in runs if r.spec.focus]
-        per_job = {}
-        progress = ideal = active = 0.0
-        for r in focus:
-            end = r.end_t if r.end_t is not None else spec.duration_s
-            span = max(end - r.start_t, 1e-9)
-            job_ideal = r.healthy_busbw * span
-            per_job[str(r.spec.job_id)] = {
-                "healthy_busbw_gbps": r.healthy_busbw,
-                "final_busbw_gbps": r.busbw,
-                "progress_gb": r.progress_gb,
-                "ideal_gb": job_ideal,
-                "goodput_frac": r.progress_gb / job_ideal if job_ideal else 0.0,
-            }
-            progress += r.progress_gb
-            ideal += job_ideal
-            active += span
-        lat = [f["detection_s"] for f in self.fault_records]
-        hits = sum(1 for f in self.fault_records if f["localized"])
-        total_down = sum(self.phases.values())
-        report = {
+        down: DowntimeService = self.kernel.service("downtime")
+        c4d: C4DService = self.kernel.service("c4d")
+        acct = down.accounting_report()
+        faults = down.fault_records
+        lat = [f["detection_s"] for f in faults]
+        hits = sum(1 for f in faults if f["localized"])
+        return {
             "scenario": spec.name,
             "description": spec.description,
             "paper_ref": spec.paper_ref,
             "fabric": self.mode,
             "seed": spec.seed,
             "duration_s": spec.duration_s,
-            "restarts": self.restarts,
+            "restarts": down.restarts,
             "detection": {
-                "n_faults": len(self.fault_records),
+                "n_faults": len(faults),
                 "latencies_s": lat,
                 "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
                 "localization_hits": hits,
                 "localization_accuracy":
-                    hits / len(self.fault_records) if self.fault_records else 1.0,
-                "faults": self.fault_records,
+                    hits / len(faults) if faults else 1.0,
+                "faults": faults,
             },
-            "network": {
-                "n_events": len(self.network_records),
-                "detections": self.network_records,
-            },
-            "downtime": {
-                **{k: float(v) for k, v in self.phases.items()},
-                "total_s": float(total_down),
-                "fraction_of_duration":
-                    float(total_down / active) if active else 0.0,
-            },
-            "goodput": {
-                "per_job": per_job,
-                "effective_gbps":
-                    float(progress / active) if active else 0.0,
-                "ideal_gbps": float(ideal / active) if active else 0.0,
-                "fraction": float(progress / ideal) if ideal else 0.0,
-            },
-            "timeline": self.timeline,
+            "network": c4d.network_report(),
+            "streaming": c4d.streaming_report(),
+            "downtime": acct["downtime"],
+            "goodput": acct["goodput"],
+            "timeline": self._timeline(),
         }
-        return report
 
 
 def run_scenario(spec: ScenarioSpec) -> dict:

@@ -85,6 +85,19 @@ class FabricState:
     def restore_link(self, link: LinkId) -> None:
         self.topo.restore_link(tuple(link))
 
+    def probe_refresh(self) -> Optional["object"]:
+        """Run a full-mesh probe sweep and fold it into the health monitor
+        (paper §3.2: re-planning is driven by ``PathProber`` reports, not by
+        out-of-band knowledge of the topology).  Faulty links are marked
+        down for allocation; links a sweep proves healthy again are marked
+        back up.  Returns the ``ProbeReport`` (None under ECMP, which has no
+        control plane to inform)."""
+        if self.master is None:
+            return None
+        report = self.master.prober.probe()
+        self.master.health.update_from_probe(report)
+        return report
+
     def blacklist_link(self, link: LinkId) -> None:
         """C4D verdict -> C4P link blacklist (the detect->avoid composition);
         a no-op under ECMP, which has no control plane to inform."""

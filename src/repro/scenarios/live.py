@@ -2,23 +2,28 @@
 training stack (jitted steps, CheckpointManager, elastic restart).
 
 The virtual-clock engine models restart cost in seconds; this driver
-cross-checks the same drill on the actual ``train.trainer.Trainer``: each
-``InjectFault`` event becomes a ``FaultInjector`` entry at a step derived
-from the event time, the trainer's own C4D master issues the verdicts, and
-the run restores from real checkpoints.  Cluster, steering, and telemetry
-are *shared* with the driver (the Trainer accepts injected control-plane
-pieces), so the isolation decisions land on the same simulated cluster the
-report describes.
+cross-checks the same drill on the actual ``train.trainer.Trainer``.  The
+wiring lives in ``scenarios.services.trainer_service.TrainerService`` —
+just another service on the runtime kernel: it collects the spec's
+``InjectFault`` events as they are delivered on the virtual clock and
+replays them as ``FaultInjector`` entries at steps derived from the event
+times.  ``drive`` composes a one-service kernel around it (the CLI's
+``--live`` path); registering the same service next to the simulation
+services on a shared kernel gives a combined run.
 
-jax (and the full model stack) is imported lazily — the campaign engine and
-CLI stay importable on a numpy-only environment; ``--live`` is the opt-in.
+jax (and the full model stack) is imported lazily inside the replay — the
+campaign engine and CLI stay importable on a numpy-only environment;
+``--live`` is the opt-in.
 """
 from __future__ import annotations
 
 from typing import Dict, Optional
 
-from repro.core.cluster import SimCluster, SteeringService
-from repro.core.faults import Fault, RingJobTelemetry
+from repro.core.faults import Fault
+from repro.runtime import EventBus
+from repro.scenarios.services.trainer_service import TrainerService
+from repro.scenarios.services.trainer_service import \
+    fault_schedule as _service_schedule
 from repro.scenarios.spec import InjectFault, ScenarioSpec
 
 
@@ -26,19 +31,8 @@ def fault_schedule(spec: ScenarioSpec, n_steps: int) -> Dict[int, Fault]:
     """Map the spec's InjectFault events onto trainer step indices,
     proportionally: event time t -> step round(t / duration * n_steps)
     (clamped to [1, n_steps - 1]; step 0 is the baseline checkpoint)."""
-    sched: Dict[int, Fault] = {}
-    for ev in spec.sorted_events():
-        if not isinstance(ev, InjectFault):
-            continue
-        step = int(round(ev.t / spec.duration_s * n_steps))
-        step = min(max(step, 1), n_steps - 1)
-        while step in sched and step < n_steps - 1:
-            step += 1                      # keep cascading faults distinct
-        kind = ev.kind or "crash"
-        rank = ev.rank if ev.rank is not None else 0
-        sched[step] = Fault(kind, rank=rank,
-                            severity=ev.severity if ev.severity is not None else 8.0)
-    return sched
+    events = [ev for ev in spec.sorted_events() if isinstance(ev, InjectFault)]
+    return _service_schedule(events, spec.duration_s, n_steps)
 
 
 def drive(spec: ScenarioSpec, workdir: str, n_steps: int = 14,
@@ -49,33 +43,14 @@ def drive(spec: ScenarioSpec, workdir: str, n_steps: int = 14,
     The returned dict mirrors the engine report's shape where the concepts
     overlap (restarts, detections, downtime in *steps* instead of seconds).
     """
-    import jax  # noqa: F401  (pulled transitively; fail early and loud)
-
-    from repro.common.config import ShapeSpec
-    from repro.configs import get_smoke_config
-    from repro.train.trainer import FaultInjector, Trainer
-
-    run = get_smoke_config(config_name)
-    shape = ShapeSpec("t", run.train.seq_len, run.train.global_batch, "train")
-    nodes = sim_nodes or max(4, spec.telemetry_ranks // spec.ranks_per_node)
-    cluster = SimCluster(n_active=nodes, n_backup=max(2, nodes // 8))
-    steering = SteeringService(cluster)
-    telemetry = RingJobTelemetry(n_ranks=nodes * spec.ranks_per_node,
-                                 seed=spec.seed + 1)
-    trainer = Trainer(run, shape, workdir=workdir, checkpoint_async=False,
-                      cluster=cluster, steering=steering, telemetry=telemetry)
-    sched = fault_schedule(spec, n_steps)
-    report = trainer.train(n_steps, injector=FaultInjector(dict(sched)))
-    return {
-        "scenario": spec.name,
-        "mode": "live_trainer",
-        "n_steps": n_steps,
-        "scheduled_faults": {str(k): v.kind for k, v in sched.items()},
-        "restarts": report.restarts,
-        "detections": report.detections,
-        "downtime_steps": report.downtime_steps,
-        "steps_run": report.steps_run,
-        "final_loss": report.losses[-1] if report.losses else None,
-        "isolated_nodes": [n.node_id for n in cluster.nodes.values()
-                           if n.state == "isolated"],
-    }
+    kernel = EventBus(seed=spec.seed)
+    svc = TrainerService(spec, workdir=workdir, n_steps=n_steps,
+                         config_name=config_name, sim_nodes=sim_nodes)
+    kernel.register(svc)
+    kernel.start(spec.duration_s)
+    for ev in spec.sorted_events():
+        kernel.schedule(ev.t, ev)
+    kernel.drain()
+    kernel.stop()                 # on_stop performs the real-Trainer replay
+    assert svc.report is not None
+    return svc.report

@@ -30,13 +30,12 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.faults import sample_error_class
+from repro.core.phases import HOURS
 from repro.scenarios.engine import run_scenario
 from repro.scenarios.report import CampaignReport
 from repro.scenarios.spec import (FailLink, InjectFault, JobSpec, RestoreLink,
                                   ScenarioSpec, StartJob, StopJob)
 from repro.scenarios.stats import aggregate, trial_metrics
-
-HOURS = 3600.0
 
 
 @dataclass(frozen=True)
@@ -78,6 +77,11 @@ class CampaignSpec:
     flap_outage_s: Tuple[float, float] = (300.0, 1800.0)
     apply_localization_ceiling: bool = True
     checkpoint_period_s: float = 600.0
+    # always-on streaming C4D sampling period per trial.  30 s (the C4D
+    # window) is the faithful setting; large-GPU campaigns may coarsen it —
+    # a streaming window at 1024 ranks costs ~100 ms of wall time (see
+    # benchmarks/bench_runtime.py), so 480 ticks/trial adds up.
+    streaming_tick_s: float = 30.0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -146,6 +150,7 @@ def sample_trial(spec: CampaignSpec, trial: int) -> ScenarioSpec:
         ranks_per_node=spec.ranks_per_node,
         checkpoint_period_s=spec.checkpoint_period_s,
         apply_localization_ceiling=spec.apply_localization_ceiling,
+        streaming_tick_s=spec.streaming_tick_s,
         jobs=(JobSpec(0, tuple(range(spec.n_hosts))),),
         events=tuple(events),
     )
@@ -226,14 +231,17 @@ def fleet_smoke() -> CampaignSpec:
 @register
 def fleet_1024() -> CampaignSpec:
     """The scale target: 64 trials at 1024 simulated GPUs (the regime the
-    vectorized C4D path exists for; < 120 s on CI hardware)."""
+    vectorized C4D path exists for).  Streaming detection samples every
+    120 s here — a 1024-rank streaming window costs ~100 ms of wall time,
+    so the faithful 30 s tick would dominate the campaign."""
     return CampaignSpec(
         name="fleet_1024",
         description="64 trials at 1024 GPUs each: randomized Table-1 fault "
                     "populations with contention and flaps, statistical "
                     "paper-claim report with CIs.",
         paper_ref="§5 fleet statistics, Table 3, Fig. 9/11",
-        n_trials=64, gpus=1024, duration_s=4 * HOURS)
+        n_trials=64, gpus=1024, duration_s=4 * HOURS,
+        streaming_tick_s=120.0)
 
 
 @register

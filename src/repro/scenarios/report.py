@@ -75,6 +75,15 @@ class CampaignReport:
             f"p90 {_fmt(ov['mttr_s']['p90'], 0)} s | "
             f"p99 {_fmt(ov['mttr_s']['p99'], 0)} s "
             f"(baseline p50 {_fmt(ov['baseline_mttr_s']['p50'], 0)} s)",
+        ]
+        st = agg.get("streaming")
+        if st and st["latency_s"]["n"]:
+            lines.append(
+                f"online det    : p50 {_fmt(st['latency_s']['p50'], 0)} s | "
+                f"p99 {_fmt(st['latency_s']['p99'], 0)} s | "
+                f"recall {_fmt(st['online_recall'], 3)} | "
+                f"fault-free FP rate {_fmt(st['fault_free_fp_rate'], 4)}")
+        lines += [
             f"goodput       : {_ci(eff['goodput_frac'], 3)} of ideal",
             f"overhead cut  : {_ci(ov['cut_pct_points'], 1, ' pt')} "
             f"(paper ~30 pt of month)",
@@ -139,6 +148,24 @@ def render_markdown(rep: dict) -> str:
         out.append(f"| fabric events observed | "
                    f"{det['network_observed_rate']:.2f} "
                    f"(edge hit {det['network_edge_hit_rate']:.2f}) |")
+    st = rep["aggregates"].get("streaming")
+    if st and st["latency_s"]["n"]:
+        out += [
+            "",
+            "## Always-on streaming detection (measured on the clock)",
+            "",
+            "| metric | value |",
+            "|---|---|",
+            f"| online latency p50 / p90 / p99 | "
+            f"{_fmt(st['latency_s']['p50'], 0)} / "
+            f"{_fmt(st['latency_s']['p90'], 0)} / "
+            f"{_fmt(st['latency_s']['p99'], 0)} s |",
+            f"| online detected / missed | {st['detected']} / {st['missed']} |",
+            f"| online recall | {_fmt(st['online_recall'], 3)} |",
+            f"| fault-free windows | {st['fault_free_windows']} |",
+            f"| fault-free false-positive rate | "
+            f"{_fmt(st['fault_free_fp_rate'], 4)} |",
+        ]
     out += [
         "",
         "## Downtime (MTTR per fault, Table-3 phases)",

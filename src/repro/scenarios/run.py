@@ -60,6 +60,14 @@ def _summary_lines(rep: dict) -> List[str]:
         obs = sum(1 for d in rep["network"]["detections"] if d["observed"])
         lines.append(f"network       : {rep['network']['n_events']} fabric "
                      f"observation(s), {obs} seen by C4D")
+    st = rep.get("streaming")
+    if st and st["windows"]:
+        fp = ("n/a" if st["fault_free_fp_rate"] is None
+              else f"{st['fault_free_fp_rate']:.4f}")
+        lines.append(
+            f"streaming     : {st['windows']} windows @ {st['tick_s']:.0f} s, "
+            f"{st['detected']}/{st['detected'] + st['missed']} faults seen "
+            f"online, fault-free FP rate {fp}")
     if "ab" in rep:
         ab = rep["ab"]
         lines.append(f"A/B           : C4P {ab['c4p_effective_gbps']:.1f} vs "

@@ -1,0 +1,29 @@
+"""Scenario services on the runtime kernel (docs/runtime.md).
+
+The campaign engine's layers, re-homed as independent services sharing a
+``RunContext`` and a deterministic ``repro.runtime.EventBus``:
+
+  * ``DowntimeService`` (priority 0) — goodput integral + Table-3 phase
+    accounting + restart scheduling;
+  * ``FabricService`` (priority 10) — live fabric, probe-driven
+    re-planning, busbw-changed events;
+  * ``C4DService`` (priority 20) — per-fault reference detection and the
+    always-on streaming detector;
+  * ``TrainerService`` (priority 30) — the real-Trainer replay wiring.
+"""
+from repro.scenarios.services.c4d_service import C4DService
+from repro.scenarios.services.context import JobRun, RunContext
+from repro.scenarios.services.downtime_service import DowntimeService
+from repro.scenarios.services.events import (BusbwChanged, FabricTransient,
+                                             FaultDetected, JobAdmitted,
+                                             JobResumed, LinkObserved,
+                                             RestartComplete, admitted_spec)
+from repro.scenarios.services.fabric_service import FabricService
+from repro.scenarios.services.trainer_service import TrainerService
+
+__all__ = [
+    "RunContext", "JobRun",
+    "DowntimeService", "FabricService", "C4DService", "TrainerService",
+    "JobAdmitted", "RestartComplete", "JobResumed", "FaultDetected",
+    "FabricTransient", "LinkObserved", "BusbwChanged", "admitted_spec",
+]

@@ -131,6 +131,8 @@ class ScenarioSpec:
     assisted_diag_median_s: float = 2700.0    # non-localised fallback
     apply_localization_ceiling: bool = False  # Table-1 ambiguity draw
     bridge_threshold: float = 1.8             # conn-rate ratio -> telemetry fault
+    streaming_tick_s: float = 30.0            # always-on C4D sampling period
+    #                                           (0 disables the streaming path)
 
     jobs: Tuple[JobSpec, ...] = ()
     events: Tuple[Event, ...] = ()

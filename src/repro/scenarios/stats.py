@@ -18,6 +18,10 @@ exactly those aggregates, with confidence intervals:
     intervals over per-trial goodput fractions and the C4P-vs-ECMP A/B
     gain, composed into the C4-vs-baseline efficiency-gain bracket the
     paper claims.
+  * **Streaming detection** — the always-on ``C4DService`` path: online
+    detection latency measured on the virtual clock (p50/p90/p99) and the
+    fault-free false-positive rate of the persistent detector, quantities
+    the per-fault batch harness structurally cannot produce.
 
 The no-C4D counterfactual uses the Table-3 ``BASELINE_JUN23`` policy's
 expected values (30-min elastic-agent hang timeout, median manual
@@ -31,7 +35,8 @@ from typing import List
 
 import numpy as np
 
-from repro.core.downtime import BASELINE_JUN23, C4D_DEC23, DAYS
+from repro.core.downtime import BASELINE_JUN23, C4D_DEC23
+from repro.core.phases import DAYS
 
 _HANG_KINDS = ("crash", "comm_hang", "noncomm_hang")
 MONTH_S = 30.0 * DAYS
@@ -47,6 +52,22 @@ PAPER_EFFICIENCY_GAIN_PCT = (30.0, 45.0)
 # cut by this fraction converts it into the step-time cost cut the
 # abstract's "15 % reduction in communication costs" refers to.
 COMM_TIME_FRACTION = 0.3
+
+
+def comm_cut_pct(gain_pct: float) -> float:
+    """Step-time cost cut (in % points) implied by one A/B busbw gain.
+
+    The busbw gain g shortens the communication phase by g/(1+g/100),
+    scaled by the comm share of iteration time.  The ratio has a pole at
+    g = -100 (an arm that made no progress), and near-degenerate arms
+    would contribute thousands of points and silently own the campaign
+    mean — so the per-trial value is clipped to one full step time either
+    way: beyond that the trial is a goodput degeneracy, not a
+    communication-cost measurement."""
+    if gain_pct <= -100.0:
+        return -100.0
+    cut = 100.0 * COMM_TIME_FRACTION * (gain_pct / (100.0 + gain_pct))
+    return float(np.clip(cut, -100.0, 100.0))
 
 
 def baseline_fault_downtime_s(fault: dict,
@@ -76,6 +97,7 @@ def trial_metrics(report: dict) -> dict:
     acted = [f for f in faults if f["acted"]]
     tp = sum(1 for f in acted if f["localized"])
     net = report["network"]["detections"]
+    streaming = report.get("streaming", {})
     out = {
         "scenario": report["scenario"],
         "seed": report["seed"],
@@ -95,6 +117,12 @@ def trial_metrics(report: dict) -> dict:
         "network_events": report["network"]["n_events"],
         "network_observed": sum(1 for d in net if d["observed"]),
         "network_edge_hits": sum(1 for d in net if d["edge_hit"]),
+        # always-on streaming C4D (measured on the clock; engine "streaming")
+        "streaming_latencies_s": streaming.get("latencies_s", []),
+        "streaming_detected": streaming.get("detected", 0),
+        "streaming_missed": streaming.get("missed", 0),
+        "streaming_fault_free_windows": streaming.get("fault_free_windows", 0),
+        "streaming_fp_windows": streaming.get("false_positive_windows", 0),
     }
     if "ab" in report:
         out["ab_gain_pct"] = report["ab"]["gain_pct"]
@@ -166,6 +194,24 @@ def aggregate(trials: List[dict]) -> dict:
         "network_edge_hit_rate": net_hit / net_ev if net_ev else None,
     }
 
+    # -- always-on streaming C4D: latency *measured on the clock* (fault
+    #    onset -> master action, including the onset-to-window-boundary
+    #    phase the per-fault harness cannot see) and the fault-free
+    #    false-positive rate of the persistent detector
+    s_lat = [x for t in trials for x in t.get("streaming_latencies_s", [])]
+    s_det = sum(t.get("streaming_detected", 0) for t in trials)
+    s_miss = sum(t.get("streaming_missed", 0) for t in trials)
+    s_ffw = sum(t.get("streaming_fault_free_windows", 0) for t in trials)
+    s_fpw = sum(t.get("streaming_fp_windows", 0) for t in trials)
+    streaming = {
+        "latency_s": percentiles(s_lat),
+        "detected": s_det, "missed": s_miss,
+        "online_recall": s_det / (s_det + s_miss) if (s_det + s_miss) else None,
+        "fault_free_windows": s_ffw,
+        "false_positive_windows": s_fpw,
+        "fault_free_fp_rate": s_fpw / s_ffw if s_ffw else None,
+    }
+
     # -- error-induced overhead: measured C4D downtime vs the no-C4D
     #    counterfactual, extrapolated to the paper's month at Table-3 rates
     mttr_mean = float(np.mean(mttr)) if mttr else 0.0
@@ -199,8 +245,7 @@ def aggregate(trials: List[dict]) -> dict:
     #    by the comm share of iteration time it becomes the step-time cost
     #    cut the abstract quotes as "15 %".
     gains = [t["ab_gain_pct"] for t in trials if "ab_gain_pct" in t]
-    comm_cuts = [100.0 * COMM_TIME_FRACTION * (g / (100.0 + g))
-                 for g in gains]
+    comm_cuts = [comm_cut_pct(g) for g in gains]
     comm = {
         "ab_gain_pct": mean_ci(gains),
         "comm_time_fraction": COMM_TIME_FRACTION,
@@ -216,14 +261,13 @@ def aggregate(trials: List[dict]) -> dict:
     for t, cut in zip(trials, trial_cuts):
         if "ab_gain_pct" not in t:
             continue
-        g = t["ab_gain_pct"]
-        eff_gains.append((cut or 0.0)
-                         + 100.0 * COMM_TIME_FRACTION * (g / (100.0 + g)))
+        eff_gains.append((cut or 0.0) + comm_cut_pct(t["ab_gain_pct"]))
     efficiency = {
         "goodput_frac": mean_ci([t["goodput_frac"] for t in trials]),
         "downtime_frac": mean_ci([t["downtime_frac"] for t in trials]),
         "gain_pct": _claim(mean_ci(eff_gains),
                            *PAPER_EFFICIENCY_GAIN_PCT),
     }
-    return {"detection": detection, "overhead": overhead,
-            "communication": comm, "efficiency": efficiency}
+    return {"detection": detection, "streaming": streaming,
+            "overhead": overhead, "communication": comm,
+            "efficiency": efficiency}

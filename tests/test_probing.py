@@ -1,0 +1,126 @@
+"""Direct unit tests for C4P path probing and link-health monitoring."""
+from repro.core.c4p.probing import LinkHealthMonitor, PathProber
+from repro.core.topology import paper_testbed
+from repro.scenarios.fabric import FabricState
+
+
+# ---------------------------------------------------------------------------
+# PathProber
+# ---------------------------------------------------------------------------
+
+def test_probe_healthy_fabric_catalogs_every_path():
+    topo = paper_testbed()
+    rep = PathProber(topo).probe()
+    assert not rep.faulty_links
+    expect = topo.n_leaves * (topo.n_leaves - 1) * topo.n_spines
+    assert len(rep.healthy_paths) == expect
+    assert set(rep.latencies_us) == rep.healthy_paths
+    assert all(v >= 4.0 for v in rep.latencies_us.values())
+
+
+def test_probe_is_seeded_and_deterministic():
+    topo = paper_testbed()
+    a = PathProber(topo, seed=5).probe()
+    b = PathProber(topo, seed=5).probe()
+    assert a.latencies_us == b.latencies_us
+
+
+# ---------------------------------------------------------------------------
+# LinkHealthMonitor mark-down / mark-up
+# ---------------------------------------------------------------------------
+
+def test_probe_marks_links_down_and_up():
+    topo = paper_testbed()
+    mon = LinkHealthMonitor(topo)
+    prober = PathProber(topo)
+    topo.fail_link(("ls", 0, 3))
+    mon.update_from_probe(prober.probe())
+    assert ("ls", 0, 3) in mon.blacklist          # mark-down
+    topo.restore_link(("ls", 0, 3))
+    mon.update_from_probe(prober.probe())
+    assert ("ls", 0, 3) not in mon.blacklist      # mark-up on a clean sweep
+
+
+def test_transport_errors_are_sticky_across_probes():
+    """A link that corrupted live traffic stays cataloged even when probes
+    pass (operators repair it out of band); probe-derived entries recover."""
+    topo = paper_testbed()
+    mon = LinkHealthMonitor(topo)
+    mon.report_transport_error(("ls", 2, 1))
+    topo.fail_link(("sl", 4, 5))
+    mon.update_from_probe(PathProber(topo).probe())
+    assert {("ls", 2, 1), ("sl", 4, 5)} <= mon.blacklist
+    topo.restore_link(("sl", 4, 5))
+    mon.update_from_probe(PathProber(topo).probe())
+    assert ("sl", 4, 5) not in mon.blacklist
+    assert ("ls", 2, 1) in mon.blacklist          # sticky
+
+
+def test_usable_spines_excludes_blacklist_and_dead_links():
+    topo = paper_testbed()
+    mon = LinkHealthMonitor(topo)
+    all_spines = mon.usable_spines(0, 1)
+    assert all_spines == list(range(topo.n_spines))
+    mon.report_transport_error(("ls", 0, 2))      # src-side uplink
+    mon.report_transport_error(("sl", 5, 1))      # dst-side downlink
+    topo.fail_link(("ls", 0, 7))                  # dead, never blacklisted
+    assert mon.usable_spines(0, 1) == [s for s in range(topo.n_spines)
+                                       if s not in (2, 5, 7)]
+    # an unrelated leaf pair only loses the dst-side blacklisted spine
+    assert 2 in mon.usable_spines(3, 1) and 5 not in mon.usable_spines(3, 1)
+
+
+# ---------------------------------------------------------------------------
+# usable_spines cache invalidation
+# ---------------------------------------------------------------------------
+
+def test_usable_spines_cache_hits_and_invalidation():
+    topo = paper_testbed()
+    mon = LinkHealthMonitor(topo)
+    first = mon.usable_spines(0, 1)
+    assert mon.usable_spines(0, 1) is first       # version-keyed cache hit
+    # blacklist edits invalidate ...
+    mon.report_transport_error(("ls", 0, 0))
+    second = mon.usable_spines(0, 1)
+    assert second is not first and 0 not in second
+    # ... repeated identical reports do not (set unchanged => same version)
+    mon.report_transport_error(("ls", 0, 0))
+    assert mon.usable_spines(0, 1) is second
+    # topology health changes invalidate through the topo version counter
+    topo.fail_link(("ls", 0, 4))
+    third = mon.usable_spines(0, 1)
+    assert third is not second and 4 not in third
+    topo.restore_link(("ls", 0, 4))
+    fourth = mon.usable_spines(0, 1)
+    assert fourth is not third and 4 in fourth
+
+
+def test_probe_with_no_change_keeps_cache_valid():
+    topo = paper_testbed()
+    mon = LinkHealthMonitor(topo)
+    prober = PathProber(topo)
+    mon.update_from_probe(prober.probe())
+    cached = mon.usable_spines(2, 3)
+    mon.update_from_probe(prober.probe())         # identical sweep
+    assert mon.usable_spines(2, 3) is cached
+
+
+# ---------------------------------------------------------------------------
+# FabricState probe-driven replanning
+# ---------------------------------------------------------------------------
+
+def test_fabric_probe_refresh_marks_down_then_up():
+    fab = FabricState(mode="c4p", qps_per_port=1)
+    fab.add_job(0, [0, 8])
+    fab.fail_link(("ls", 0, 1))
+    rep = fab.probe_refresh()
+    assert ("ls", 0, 1) in rep.faulty_links
+    assert ("ls", 0, 1) in fab.master.health.blacklist
+    fab.restore_link(("ls", 0, 1))
+    fab.probe_refresh()
+    assert ("ls", 0, 1) not in fab.master.health.blacklist
+
+
+def test_fabric_probe_refresh_is_noop_under_ecmp():
+    fab = FabricState(mode="ecmp")
+    assert fab.probe_refresh() is None

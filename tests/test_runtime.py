@@ -1,0 +1,282 @@
+"""Runtime kernel: ordering/lifecycle invariants + the determinism drill."""
+import json
+
+import pytest
+
+from repro.core.c4d.master import C4DMaster
+from repro.core.faults import Fault, RingJobTelemetry
+from repro.runtime import ClockError, EventBus, Service, VirtualClock
+from repro.scenarios import library
+from repro.scenarios.detection import DetectionHarness
+from repro.scenarios.engine import CampaignEngine, build_services, run_scenario
+from repro.scenarios.spec import InjectFault, JobSpec, ScenarioSpec, StopJob
+
+
+class Recorder(Service):
+    """Records every lifecycle call as (hook, payload) tuples."""
+
+    def __init__(self, name, priority=0, tick_period_s=0.0, log=None):
+        self.name, self.priority = name, priority
+        self.tick_period_s = tick_period_s
+        self.log = log if log is not None else []
+
+    def on_start(self, kernel):
+        super().on_start(kernel)
+        self.log.append((self.name, "start"))
+
+    def on_event(self, event):
+        self.log.append((self.name, "event", event, self.kernel.clock.now))
+
+    def on_tick(self, t):
+        self.log.append((self.name, "tick", t))
+
+    def on_stop(self):
+        self.log.append((self.name, "stop"))
+
+
+# ---------------------------------------------------------------------------
+# kernel invariants
+# ---------------------------------------------------------------------------
+
+def test_clock_never_moves_backwards():
+    c = VirtualClock()
+    c.advance(5.0)
+    assert c.advance(5.0) == 5.0          # equal time is fine
+    with pytest.raises(ClockError):
+        c.advance(4.0)
+
+
+def test_events_deliver_in_time_then_fifo_order():
+    bus = EventBus()
+    log = []
+    bus.register(Recorder("r", log=log))
+    bus.start(100.0)
+    bus.schedule(30.0, "b")
+    bus.schedule(10.0, "a")
+    bus.schedule(30.0, "c")               # same t as "b": FIFO by seq
+    bus.drain()
+    bus.stop()
+    events = [(e[2], e[3]) for e in log if e[1] == "event"]
+    assert events == [("a", 10.0), ("b", 30.0), ("c", 30.0)]
+
+
+def test_ticks_run_after_events_at_the_same_instant():
+    bus = EventBus()
+    log = []
+    bus.register(Recorder("r", tick_period_s=10.0, log=log))
+    bus.start(20.0)
+    bus.schedule(10.0, "ev")              # collides with the first tick
+    bus.drain()
+    bus.stop()
+    seq = [(e[1], e[2]) for e in log if e[1] in ("event", "tick")]
+    assert seq == [("event", "ev"), ("tick", 10.0), ("tick", 20.0)]
+
+
+def test_delivery_order_is_priority_not_registration():
+    def run(order):
+        log = []
+        bus = EventBus()
+        svcs = [Recorder("low", priority=0, log=log),
+                Recorder("high", priority=10, log=log)]
+        for s in (svcs if order == "fwd" else reversed(svcs)):
+            bus.register(s)
+        bus.start(10.0)
+        bus.schedule(1.0, "x")
+        bus.drain()
+        bus.stop()
+        return [e[0] for e in log]
+    assert run("fwd") == run("rev")
+    assert run("fwd") == ["low", "high",            # start
+                          "low", "high",            # event
+                          "low", "high"]            # stop
+
+
+def test_publish_is_a_synchronous_cascade():
+    bus = EventBus()
+    log = []
+
+    class Chainer(Service):
+        name, priority = "chain", 5
+
+        def on_event(self, event):
+            if event == "trigger":
+                log.append("before")
+                self.kernel.publish("chained")
+                log.append("after")
+            elif event == "chained":
+                log.append("handled")
+
+    bus.register(Chainer())
+    bus.start(10.0)
+    bus.publish("trigger")
+    assert log == ["before", "handled", "after"]
+
+
+def test_horizon_drops_late_events():
+    bus = EventBus()
+    log = []
+    bus.register(Recorder("r", log=log))
+    bus.start(50.0)
+    bus.schedule(40.0, "in")
+    bus.schedule(60.0, "out")             # past the horizon: dropped
+    bus.drain()
+    bus.stop()
+    assert [e[2] for e in log if e[1] == "event"] == ["in"]
+    assert bus.clock.now == 50.0          # stop() advances to the horizon
+
+
+def test_duplicate_service_name_rejected():
+    bus = EventBus()
+    bus.register(Recorder("dup"))
+    with pytest.raises(ValueError):
+        bus.register(Recorder("dup"))
+
+
+# ---------------------------------------------------------------------------
+# the determinism drill (satellite): same seed => bit-identical trace and
+# report, across repeated runs AND across service registration order
+# ---------------------------------------------------------------------------
+
+def _drill_spec():
+    return library.get("ecmp_vs_c4p_ab", seed=3)
+
+
+def _engine_artifacts(service_factory=None):
+    eng = CampaignEngine(_drill_spec(), fabric_mode="c4p",
+                         service_factory=service_factory)
+    rep = eng.run()
+    return ("\n".join(eng.kernel.trace_lines()),
+            json.dumps(rep, sort_keys=True, default=str))
+
+
+def test_same_seed_bit_identical_trace_and_report():
+    t1, r1 = _engine_artifacts()
+    t2, r2 = _engine_artifacts()
+    assert t1 == t2
+    assert r1 == r2
+
+
+def test_registration_order_never_changes_the_run():
+    fwd = _engine_artifacts()
+    rev = _engine_artifacts(lambda ctx: list(reversed(build_services(ctx))))
+    assert fwd == rev
+
+
+def test_campaign_report_identical_across_runs():
+    from repro.scenarios.montecarlo import CampaignSpec, run_campaign
+    cam = CampaignSpec(name="det", n_trials=2, gpus=32, duration_s=1800.0,
+                       faults_per_hour=2.0)
+    a = json.dumps(run_campaign(cam).to_json(), sort_keys=True)
+    b = json.dumps(run_campaign(cam).to_json(), sort_keys=True)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# always-on streaming C4D
+# ---------------------------------------------------------------------------
+
+def test_streaming_observes_golden_fault_on_the_clock():
+    rep = run_scenario(library.get("silent_pcie_degradation"))
+    st = rep["streaming"]
+    assert st["windows"] > 0 and st["fault_windows"] > 0
+    assert st["detected"] == 1 and st["missed"] == 0
+    (f,) = st["faults"]
+    assert f["detected_t"] is not None
+    # slow syndromes need the 2-window confirmation streak; latency is
+    # measured on the clock so it includes the onset->boundary phase
+    assert 0.0 <= f["latency_s"] <= 3 * st["tick_s"]
+    # the per-fault reference path agrees (Table-3 golden behaviour)
+    assert rep["detection"]["faults"][0]["localized"]
+    assert f["expected_node"] == rep["detection"]["faults"][0]["expected_node"]
+
+
+def test_streaming_measures_fault_free_false_positive_rate():
+    spec = ScenarioSpec(name="quiet", description="no faults at all",
+                        duration_s=1800.0,
+                        jobs=(JobSpec(0, tuple(range(8))),))
+    rep = run_scenario(spec)
+    st = rep["streaming"]
+    assert st["windows"] == 60
+    assert st["fault_free_windows"] + st["down_windows"] \
+        + st["fault_windows"] == st["windows"]
+    assert st["down_windows"] == 0 and st["fault_windows"] == 0
+    assert st["fault_free_fp_rate"] is not None
+    assert 0.0 <= st["fault_free_fp_rate"] < 0.2
+
+
+def test_streaming_disabled_keeps_report_shape():
+    spec = ScenarioSpec(name="off", description="", duration_s=1800.0,
+                        streaming_tick_s=0.0,
+                        jobs=(JobSpec(0, tuple(range(8))),),
+                        events=(InjectFault(t=600.0, job_id=0,
+                                            kind="comm_hang", rank=3),))
+    rep = run_scenario(spec)
+    st = rep["streaming"]
+    assert st["windows"] == 0 and st["fault_free_fp_rate"] is None
+    assert rep["restarts"] == 1           # reference path unaffected
+
+
+def test_stopjob_during_open_fault_does_not_crash_streaming():
+    """A job removed mid-incident takes its streaming signatures with it;
+    the tick loop must not index the departed job."""
+    spec = ScenarioSpec(
+        name="stop_midfault", description="", duration_s=1800.0,
+        jobs=(JobSpec(0, tuple(range(8))),
+              JobSpec(1, tuple(range(8, 16)))),
+        events=(InjectFault(t=100.0, job_id=1, kind="comm_hang", rank=3),
+                # job 1 is still mid-restart at t=200
+                StopJob(t=200.0, job_id=1)))
+    rep = run_scenario(spec)
+    st = rep["streaming"]
+    assert st["windows"] == 60
+    # the open fault closed as a streaming observation (detected at the
+    # first tick after onset, before the job departed)
+    assert any(f["job_id"] == 1 for f in st["faults"])
+
+
+def test_degenerate_ab_gain_excluded_from_comm_model():
+    """A -100 % A/B gain (zero-progress arm) must not poison the comm-cut
+    aggregate through the g/(100+g) pole."""
+    from repro.scenarios.stats import aggregate, trial_metrics
+    base = {"scenario": "x", "seed": 1, "fabric": "c4p", "duration_s": 3600.0,
+            "restarts": 0,
+            "detection": {"n_faults": 0, "faults": []},
+            "downtime": {"fraction_of_duration": 0.0},
+            "goodput": {"fraction": 0.9},
+            "network": {"n_events": 0, "detections": []}}
+    good = dict(base, ab={"gain_pct": 50.0, "c4p_effective_gbps": 3.0,
+                          "ecmp_effective_gbps": 2.0})
+    dead = dict(base, ab={"gain_pct": -100.0, "c4p_effective_gbps": 0.0,
+                          "ecmp_effective_gbps": 2.0})
+    agg = aggregate([trial_metrics(good), trial_metrics(dead)])
+    cut = agg["communication"]["cost_cut_pct"]
+    assert cut["n"] == 2
+    # the degenerate trial contributes a clipped -100 pt, not -3e6
+    assert -100.0 <= cut["mean"] <= 100.0
+    assert abs(agg["efficiency"]["gain_pct"]["mean"]) <= 150.0
+    # near-pole (but not exactly -100) gains are clipped the same way
+    from repro.scenarios.stats import comm_cut_pct
+    assert comm_cut_pct(-99.9) == -100.0
+    assert comm_cut_pct(-100.0) == -100.0
+    assert comm_cut_pct(50.0) == pytest.approx(10.0)
+
+
+def test_streaming_master_agrees_with_harness_on_golden_windows():
+    """The persistent streaming master and the per-fault harness consume
+    identical window sequences and must produce the same verdict."""
+    for fault, node in ((Fault("comm_hang", rank=9), 1),
+                       (Fault("slow_src", rank=13, severity=9.0), 1),
+                       (Fault("straggler", rank=21, severity=25.0), 2)):
+        tel_ref = RingJobTelemetry(n_ranks=32, seed=11)
+        out = DetectionHarness(tel_ref).detect_faults([fault],
+                                                      expected_node=node)
+        assert out.acted and out.localized
+        tel_stream = RingJobTelemetry(n_ranks=32, seed=11)
+        master = C4DMaster(n_ranks=32, ranks_per_node=8)
+        acted_nodes, windows = set(), 0
+        while not acted_nodes and windows < 4:
+            win = tel_stream.window_arrays(windows, faults=[fault])
+            acted_nodes = {a.node_id for a in master.ingest(win)}
+            windows += 1
+        assert node in acted_nodes
+        assert windows == out.windows     # same confirmation streak length

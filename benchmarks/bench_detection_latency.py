@@ -10,15 +10,23 @@ Two row families:
     ``n`` ranks, vectorized struct-of-arrays path vs the scalar reference;
     ``derived.speedup`` is the ratio the Monte Carlo campaigns rely on
     (>= 10x at 1024 ranks).
+  * ``detection/streaming_<n>_{reference,precision}`` — per-window ingest
+    cost of the always-on streaming master: the pinned PR 5 path vs the
+    precision operating point (adaptive EWMA baselines + graded
+    confirmation); ``derived.overhead`` is what the extra math costs.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.c4d.master import C4DMaster
+from repro.core.c4d.master import C4DMaster, OperatingPoint
 from repro.core.faults import TABLE1, Fault, RingJobTelemetry, fault_for_class
 from repro.scenarios.detection import DetectionHarness
+
+#: the roc_smoke sweep's cost-optimal point (docs/detection.md "Precision").
+PRECISION_OP = OperatingPoint(mad_threshold=6.0, confirm_streak=3,
+                              baseline_half_life=16.0)
 
 
 def detect_once(cls, seed: int):
@@ -42,6 +50,15 @@ def pipeline_once(n_ranks: int, vectorized: bool, seed: int = 0) -> int:
                                ranks_per_node=8, vectorized=vectorized)
     fault = Fault("slow_src", rank=n_ranks // 3, severity=9.0)
     return harness.detect_faults([fault]).windows
+
+
+def streaming_pass(windows, n_ranks: int, op) -> None:
+    """Fresh streaming master ingesting a pre-synthesised window stream
+    (telemetry cost excluded — this measures the detector, not the sim)."""
+    master = (C4DMaster(n_ranks=n_ranks, ranks_per_node=8) if op is None
+              else C4DMaster.from_operating_point(op, n_ranks=n_ranks))
+    for w in windows:
+        master.ingest(w)
 
 
 def run(quick: bool = False) -> None:
@@ -74,4 +91,24 @@ def run(quick: bool = False) -> None:
             "vectorized_ms": f"{us_vec / 1e3:.1f}",
             "scalar_ms": f"{us_scalar / 1e3:.1f}",
             "speedup": f"{us_scalar / max(us_vec, 1e-9):.1f}",
+        })
+
+    # streaming ingest overhead of the precision pipeline (adaptive
+    # baselines + graded confirmation) vs the pinned PR 5 reference
+    n_windows = 6
+    for n in (64, 1024):
+        tel = RingJobTelemetry(n_ranks=n, seed=0)
+        wins = [tel.window_arrays(window_id=i) for i in range(n_windows)]
+        us_ref = timeit(lambda: streaming_pass(wins, n, None), repeats=3)
+        us_prec = timeit(lambda: streaming_pass(wins, n, PRECISION_OP),
+                         repeats=3)
+        emit(f"detection/streaming_{n}_reference", us_ref, {
+            "ranks": n, "windows": n_windows,
+            "us_per_window": f"{us_ref / n_windows:.0f}",
+        })
+        emit(f"detection/streaming_{n}_precision", us_prec, {
+            "ranks": n, "windows": n_windows,
+            "us_per_window": f"{us_prec / n_windows:.0f}",
+            "operating_point": PRECISION_OP.label().replace(",", ";"),
+            "overhead": f"{us_prec / max(us_ref, 1e-9):.2f}x",
         })

@@ -7,6 +7,9 @@
 (the JSON written by ``repro.scenarios.run --campaign ... --json``) as
 markdown through ``repro.scenarios.report.render_markdown`` — the same
 tables the ``--md`` flag produces at run time (docs/campaigns.md).
+ROC sweep reports (``--sweep ... --json``; recognised by their ``points``
+key) render through ``render_sweep_markdown`` as the operating-point
+table instead.
 """
 import glob
 import json
@@ -18,10 +21,14 @@ GiB = 2 ** 30
 
 def render_campaigns(paths):
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    from repro.scenarios.report import render_markdown
+    from repro.scenarios.report import render_markdown, render_sweep_markdown
     for path in paths:
         with open(path) as f:
-            print(render_markdown(json.load(f)))
+            rep = json.load(f)
+        if "points" in rep:             # ROC sweep report, not a campaign
+            print(render_sweep_markdown(rep))
+        else:
+            print(render_markdown(rep))
 
 
 def load(mesh):

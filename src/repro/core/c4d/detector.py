@@ -28,13 +28,16 @@ them verdict-for-verdict on golden fault windows.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.c4d.telemetry import (AnyWindow, TelemetryArrays,
                                       TelemetryWindow, delay_matrix,
                                       wait_matrix)
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
+    from repro.core.c4d.baseline import AdaptiveBaseline
 
 # syndrome kinds
 COMM_SLOW_SRC = "comm_slow_source"
@@ -68,6 +71,15 @@ class DetectorConfig:
     row_col_fraction: float = 0.6      # fraction of a row/col anomalous => rank fault
     hang_grace: float = 3.0            # multiples of median op period before hang
     min_observations: int = 1
+
+
+def _own_cfg(cfg: Optional[DetectorConfig]) -> DetectorConfig:
+    """None-sentinel for detector constructors: a fresh config per instance.
+
+    The constructors used to say ``cfg: DetectorConfig = DetectorConfig()``,
+    which Python evaluates ONCE at class-definition time — every detector in
+    the process then shared (and could mutate) the same thresholds object."""
+    return cfg if cfg is not None else DetectorConfig()
 
 
 def _robust_z(values: np.ndarray) -> np.ndarray:
@@ -108,14 +120,21 @@ class DelayMatrixDetector:
     Vectorized: rows/columns are folded with whole-matrix reductions and
     point outliers come from one boolean mask, so the cost is a handful of
     O(n^2) array ops instead of n^2 Python iterations.  Pinned against
-    ``delay_verdicts_reference`` (the original per-cell loop)."""
+    ``delay_verdicts_reference`` (the original per-cell loop).
 
-    def __init__(self, cfg: DetectorConfig = DetectorConfig()):
-        self.cfg = cfg
+    With a ``baseline`` the z-scores are normalised per cell against that
+    cell's own EWMA history where warm (docs/detection.md "Precision");
+    without one, the pinned single-window cross-section is used."""
 
-    def analyze(self, d: np.ndarray) -> List[Verdict]:
+    def __init__(self, cfg: Optional[DetectorConfig] = None):
+        self.cfg = _own_cfg(cfg)
+
+    def analyze(self, d: np.ndarray,
+                baseline: Optional["AdaptiveBaseline"] = None) -> List[Verdict]:
         cfg = self.cfg
         z = _robust_z(d)
+        if baseline is not None:
+            z = baseline.z("delay", d, fallback=z)
         hot = (z > cfg.mad_threshold) & np.isfinite(d)
         obs = np.isfinite(d)
         verdicts: List[Verdict] = []
@@ -152,17 +171,27 @@ class RingWaitDetector:
     slow (compute or data loading).
 
     Vectorized: one masked row-max over the wait z-score matrix; pinned
-    against ``ring_wait_verdicts_reference``."""
+    against ``ring_wait_verdicts_reference``.  ``d``/``w`` accept
+    precomputed matrices so the composite detector builds each once per
+    window; a ``baseline`` swaps in per-cell EWMA normalisation where warm."""
 
-    def __init__(self, cfg: DetectorConfig = DetectorConfig()):
-        self.cfg = cfg
+    def __init__(self, cfg: Optional[DetectorConfig] = None):
+        self.cfg = _own_cfg(cfg)
 
-    def analyze(self, window: AnyWindow,
-                n_ranks: Optional[int] = None) -> List[Verdict]:
-        d = delay_matrix(window, n_ranks)
-        w = wait_matrix(window, n_ranks)
+    def analyze(self, window: Optional[AnyWindow] = None,
+                n_ranks: Optional[int] = None, *,
+                d: Optional[np.ndarray] = None,
+                w: Optional[np.ndarray] = None,
+                baseline: Optional["AdaptiveBaseline"] = None) -> List[Verdict]:
+        if d is None:
+            d = delay_matrix(window, n_ranks)
+        if w is None:
+            w = wait_matrix(window, n_ranks)
         zd = _robust_z(d)
         zw = _robust_z(w)
+        if baseline is not None:
+            zd = baseline.z("delay", d, fallback=zd)
+            zw = baseline.z("wait", w, fallback=zw)
         hot_wait = (zw > self.cfg.mad_threshold) & np.isfinite(w)
         healthy_link = ~((zd > self.cfg.mad_threshold) & np.isfinite(d))
         # receiver j waited on sender i over a healthy link => i implicated
@@ -177,17 +206,23 @@ class HangDetector:
     """Progress-based hang detection from per-rank heartbeats.
 
     Vectorized: last-seq per rank via one ``np.maximum.at`` scatter; pinned
-    against ``hang_verdicts_reference``."""
+    against ``hang_verdicts_reference``.  A ``baseline`` subtracts each
+    rank's learned heartbeat deficit before the grace comparison, so a rank
+    that always trails the median by half a beat is its own normal."""
 
-    def __init__(self, cfg: DetectorConfig = DetectorConfig()):
-        self.cfg = cfg
+    def __init__(self, cfg: Optional[DetectorConfig] = None):
+        self.cfg = _own_cfg(cfg)
 
-    def analyze(self, window: AnyWindow) -> List[Verdict]:
+    def analyze(self, window: AnyWindow,
+                baseline: Optional["AdaptiveBaseline"] = None) -> List[Verdict]:
         ranks, seqs = _last_heartbeat_seqs(window)
         if ranks.size == 0:
             return []
         med = np.median(seqs)
-        hung = np.flatnonzero(med - seqs >= self.cfg.hang_grace)
+        deficit = med - seqs
+        if baseline is not None:
+            deficit = deficit - baseline.deficit_offset(ranks)
+        hung = np.flatnonzero(deficit >= self.cfg.hang_grace)
         if hung.size == 0:
             return []
         # did the rank itself start any transport before stalling?
@@ -208,8 +243,9 @@ class HangDetector:
 # ---------------------------------------------------------------------------
 
 def delay_verdicts_reference(d: np.ndarray,
-                             cfg: DetectorConfig = DetectorConfig()) -> List[Verdict]:
+                             cfg: Optional[DetectorConfig] = None) -> List[Verdict]:
     """Reference implementation of ``DelayMatrixDetector.analyze``."""
+    cfg = _own_cfg(cfg)
     z = _robust_z(d)
     hot = (z > cfg.mad_threshold) & np.isfinite(d)
     verdicts: List[Verdict] = []
@@ -243,9 +279,10 @@ def delay_verdicts_reference(d: np.ndarray,
 
 
 def ring_wait_verdicts_reference(window: TelemetryWindow,
-                                 cfg: DetectorConfig = DetectorConfig(),
+                                 cfg: Optional[DetectorConfig] = None,
                                  n_ranks: Optional[int] = None) -> List[Verdict]:
     """Reference implementation of ``RingWaitDetector.analyze``."""
+    cfg = _own_cfg(cfg)
     d = delay_matrix(window, n_ranks)
     w = wait_matrix(window, n_ranks)
     zd = _robust_z(d)
@@ -266,8 +303,9 @@ def ring_wait_verdicts_reference(window: TelemetryWindow,
 
 
 def hang_verdicts_reference(window: TelemetryWindow,
-                            cfg: DetectorConfig = DetectorConfig()) -> List[Verdict]:
+                            cfg: Optional[DetectorConfig] = None) -> List[Verdict]:
     """Reference implementation of ``HangDetector.analyze``."""
+    cfg = _own_cfg(cfg)
     if not window.heartbeats:
         return []
     last: Dict[int, Tuple[int, float]] = {}
@@ -297,18 +335,44 @@ class C4DDetector:
     it, by every composition layer (trainer drills, Table-3 downtime,
     scenario campaigns — see docs/architecture.md)."""
 
-    def __init__(self, cfg: DetectorConfig = DetectorConfig()):
-        self.cfg = cfg
-        self.delay = DelayMatrixDetector(cfg)
-        self.wait = RingWaitDetector(cfg)
-        self.hang = HangDetector(cfg)
+    def __init__(self, cfg: Optional[DetectorConfig] = None):
+        self.cfg = _own_cfg(cfg)
+        self.delay = DelayMatrixDetector(self.cfg)
+        self.wait = RingWaitDetector(self.cfg)
+        self.hang = HangDetector(self.cfg)
 
     def analyze(self, window: AnyWindow,
-                n_ranks: Optional[int] = None) -> List[Verdict]:
-        verdicts = self.hang.analyze(window)
+                n_ranks: Optional[int] = None,
+                baseline: Optional["AdaptiveBaseline"] = None) -> List[Verdict]:
+        verdicts = self.hang.analyze(window, baseline=baseline)
         if verdicts:
-            return verdicts  # hangs pre-empt slow analysis (job is stopped)
+            # hangs pre-empt slow analysis (job is stopped); the delay/wait
+            # baselines are not advanced either — a hung window's matrices
+            # carry no comm statistics worth learning from
+            return verdicts
         d = delay_matrix(window, n_ranks)
-        verdicts = self.delay.analyze(d)
-        verdicts += self.wait.analyze(window, n_ranks)
+        w = wait_matrix(window, n_ranks)
+        verdicts = self.delay.analyze(d, baseline=baseline)
+        verdicts += self.wait.analyze(window, n_ranks, d=d, w=w,
+                                      baseline=baseline)
+        if baseline is not None:
+            self._advance_baseline(baseline, window, d, w)
         return verdicts
+
+    def _advance_baseline(self, baseline: "AdaptiveBaseline",
+                          window: AnyWindow, d: np.ndarray,
+                          w: np.ndarray) -> None:
+        """Fold this window into the EWMA history.  The matrix updates are
+        winsorized inside ``AdaptiveBaseline.update`` (bounded per-window
+        drift), so no z-gate is needed here — every cell updates and a live
+        fault cannot erase itself before the streak confirms.  Heartbeat
+        deficits of ranks already past the hang grace *are* excluded:
+        a stalled counter is an outage, not a statistic."""
+        baseline.update("delay", d)
+        baseline.update("wait", w)
+        ranks, seqs = _last_heartbeat_seqs(window)
+        if ranks.size:
+            deficit = np.median(seqs) - seqs
+            adj = deficit - baseline.deficit_offset(ranks)
+            baseline.update_deficit(ranks, deficit.astype(float),
+                                    exclude=adj >= self.cfg.hang_grace)

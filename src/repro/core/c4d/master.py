@@ -14,19 +14,99 @@ offline analysis accordingly".
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List
+from dataclasses import dataclass, field, fields
+from typing import Dict, List, Optional
 
 from repro.core.c4d.agent import C4Agent, prefilter_arrays, reports_to_window
-from repro.core.c4d.detector import C4DDetector, Verdict, COMM_HANG, NONCOMM_HANG
+from repro.core.c4d.baseline import AdaptiveBaseline
+from repro.core.c4d.detector import (C4DDetector, DetectorConfig, Verdict,
+                                     COMM_HANG, NONCOMM_HANG)
 from repro.core.c4d.telemetry import AnyWindow, TelemetryArrays
+
+#: graded actions of the precision state machine (docs/runtime.md).
+ACTION_ISOLATE = "isolate_restart"
+ACTION_DEPRIORITIZE = "deprioritize"    # suspect: steer traffic away, keep up
+ACTION_REPRIORITIZE = "reprioritize"    # suspect recovered: restore planning
 
 
 @dataclass
 class NodeAction:
     node_id: int
     verdicts: List[Verdict]
-    action: str = "isolate_restart"
+    action: str = ACTION_ISOLATE
+
+
+@dataclass(frozen=True)
+class OperatingPoint:
+    """One point on the precision/recall frontier of the streaming detector.
+
+    ``None`` (the default everywhere) keeps the pinned PR 5 behaviour:
+    single-window cross-sectional z, 2-window confirmation, no suspect
+    stage.  A concrete operating point turns on the precision pipeline —
+    adaptive per-rank baselines plus the healthy -> suspect -> confirmed ->
+    isolate state machine — and is what the ROC sweep
+    (``scenarios.precision``) selects by GPU-hour cost.
+
+    Streak semantics (per node, per monitoring window):
+
+      * a window with evidence raises the node's streak by 1;
+      * ``suspect_streak`` windows => the node is *suspect*: a
+        ``deprioritize`` action asks the fabric to re-plan around it
+        (a false positive costs a re-plan, not a restart);
+      * ``confirm_streak`` windows (``hang_streak`` for hang syndromes —
+        the job is already stopped) => ``isolate_restart``;
+      * a clean window lowers the streak by ``decay``; at zero a suspect
+        node is cleared with ``reprioritize``.
+    """
+    mad_threshold: float = 5.0
+    suspect_streak: int = 1
+    confirm_streak: int = 3
+    hang_streak: int = 1
+    decay: int = 1
+    baseline_half_life: float = 16.0   # windows; 0 = cross-sectional only
+    baseline_warm_windows: int = 3
+
+    #: CLI shorthand (``--operating-point "mad=6,streak=3,hl=16"``).
+    ALIASES = {"mad": "mad_threshold", "streak": "confirm_streak",
+               "suspect": "suspect_streak", "hang": "hang_streak",
+               "hl": "baseline_half_life", "half_life": "baseline_half_life",
+               "warm": "baseline_warm_windows"}
+
+    @classmethod
+    def parse(cls, text: str) -> "OperatingPoint":
+        """Parse ``k=v`` pairs (comma-separated, aliases allowed)."""
+        types = {f.name: f.type for f in fields(cls)}
+        kwargs = {}
+        for part in filter(None, (p.strip() for p in text.split(","))):
+            if "=" not in part:
+                raise ValueError(f"expected k=v, got {part!r}")
+            key, val = (s.strip() for s in part.split("=", 1))
+            name = cls.ALIASES.get(key, key)
+            if name not in types:
+                raise ValueError(f"unknown operating-point field {key!r}")
+            kwargs[name] = (int(val) if types[name] == "int" else float(val))
+        return cls(**kwargs)
+
+    def to_dict(self) -> Dict[str, float]:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+    def label(self) -> str:
+        return (f"mad={self.mad_threshold:g},streak={self.confirm_streak},"
+                f"hl={self.baseline_half_life:g}")
+
+    def detector_config(self) -> DetectorConfig:
+        return DetectorConfig(mad_threshold=self.mad_threshold)
+
+
+#: node states of the precision confirmation machine.
+HEALTHY, SUSPECT = "healthy", "suspect"
+
+
+@dataclass
+class _NodeTrack:
+    """Per-node confirmation state (precision branch only)."""
+    streak: int = 0
+    state: str = HEALTHY
 
 
 @dataclass
@@ -51,6 +131,10 @@ class C4DMaster:
     confirm_windows: int = 2          # consecutive windows before acting
     offline_log: List = field(default_factory=list)
     _pending: Dict[int, int] = field(default_factory=dict)  # node -> streak
+    # precision pipeline (opt-in; None keeps the pinned legacy behaviour)
+    operating_point: Optional[OperatingPoint] = None
+    baseline: Optional[AdaptiveBaseline] = None
+    _tracks: Dict[int, _NodeTrack] = field(default_factory=dict)
 
     def __post_init__(self):
         self.agents = [
@@ -58,6 +142,22 @@ class C4DMaster:
                                (nid + 1) * self.ranks_per_node))
             for nid in range((self.n_ranks + self.ranks_per_node - 1)
                              // self.ranks_per_node)]
+        op = self.operating_point
+        if op is not None and op.baseline_half_life > 0 and self.baseline is None:
+            self.baseline = AdaptiveBaseline(
+                self.n_ranks, half_life=op.baseline_half_life,
+                warm_windows=op.baseline_warm_windows)
+
+    @classmethod
+    def from_operating_point(cls, op: OperatingPoint, n_ranks: int,
+                             ranks_per_node: int = 8,
+                             window_period_s: float = 30.0) -> "C4DMaster":
+        """A streaming master tuned to one ROC-sweep operating point."""
+        return cls(n_ranks=n_ranks, ranks_per_node=ranks_per_node,
+                   detector=C4DDetector(op.detector_config()),
+                   window_period_s=window_period_s,
+                   confirm_windows=op.confirm_streak,
+                   operating_point=op)
 
     def node_of(self, rank: int) -> int:
         return rank // self.ranks_per_node
@@ -76,7 +176,8 @@ class C4DMaster:
         else:
             reports = [a.collect(window) for a in self.agents]
             merged = reports_to_window(reports, window)
-        verdicts = self.detector.analyze(merged, n_ranks=self.n_ranks)
+        verdicts = self.detector.analyze(merged, n_ranks=self.n_ranks,
+                                         baseline=self.baseline)
         self.offline_log.append((window.window_id, verdicts))
 
         by_node: Dict[int, List[Verdict]] = {}
@@ -86,6 +187,9 @@ class C4DMaster:
             elif v.link is not None:
                 # link faults implicate the source side's NIC first
                 by_node.setdefault(self.node_of(v.link[0]), []).append(v)
+
+        if self.operating_point is not None:
+            return self._confirm_graded(by_node)
 
         actions: List[NodeAction] = []
         seen = set(by_node)
@@ -103,6 +207,48 @@ class C4DMaster:
             if node not in seen:
                 self._pending.pop(node)
         return actions
+
+    # ------------------------------------------------------------------
+    def _confirm_graded(self, by_node: Dict[int, List[Verdict]]
+                        ) -> List[NodeAction]:
+        """Precision branch: healthy -> suspect -> confirmed -> isolate.
+
+        Escalation is per node; hang syndromes use their own (short)
+        streak because a hung job makes no progress while we deliberate.
+        Clean windows de-escalate by ``decay`` instead of wiping the
+        streak, so an intermittent fault flickering at 50 % duty cycle
+        still accumulates evidence."""
+        op = self.operating_point
+        actions: List[NodeAction] = []
+        for node in sorted(by_node):
+            vs = by_node[node]
+            tr = self._tracks.setdefault(node, _NodeTrack())
+            tr.streak += 1
+            hang = any(v.syndrome in (COMM_HANG, NONCOMM_HANG) for v in vs)
+            confirmed = tr.streak >= (op.hang_streak if hang
+                                      else op.confirm_streak)
+            if confirmed:
+                actions.append(NodeAction(node, vs, action=ACTION_ISOLATE))
+                self._tracks.pop(node)
+            elif tr.state == HEALTHY and tr.streak >= op.suspect_streak:
+                tr.state = SUSPECT
+                actions.append(NodeAction(node, vs,
+                                          action=ACTION_DEPRIORITIZE))
+        for node in sorted(self._tracks):
+            if node in by_node:
+                continue
+            tr = self._tracks[node]
+            tr.streak -= op.decay
+            if tr.streak <= 0:
+                if tr.state == SUSPECT:
+                    actions.append(NodeAction(node, [],
+                                              action=ACTION_REPRIORITIZE))
+                self._tracks.pop(node)
+        return actions
+
+    def node_states(self) -> Dict[int, str]:
+        """Current confirmation state per tracked node (precision branch)."""
+        return {node: tr.state for node, tr in sorted(self._tracks.items())}
 
     def detection_latency_s(self, hang: bool) -> float:
         """Expected time from fault onset to action."""

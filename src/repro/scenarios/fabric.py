@@ -38,6 +38,10 @@ class FabricState:
         self.seed = seed
         self.qps_per_port = qps_per_port
         self.job_hosts: Dict[int, List[int]] = {}
+        # hosts the streaming detector marked *suspect* (graceful
+        # degradation, docs/runtime.md): kept in the job mix but flagged
+        # for planning; populated/cleared by FabricService
+        self.suspect_hosts: set = set()
         if mode == C4P:
             self.master = C4PMaster(self.topo, qps_per_port=qps_per_port)
             self.master.startup_probe()
@@ -97,6 +101,25 @@ class FabricState:
         report = self.master.prober.probe()
         self.master.health.update_from_probe(report)
         return report
+
+    def deprioritize_host(self, host: int) -> bool:
+        """Mark a host suspect for traffic planning (C4D precision state
+        machine).  The host stays in the job mix — this is the graceful
+        stage before isolation: the caller follows up with a probe sweep
+        and re-plan so a genuinely degrading NIC is steered around, while
+        a false positive costs nothing but the re-plan.  Returns True when
+        the host is newly suspect (i.e. a re-plan is warranted)."""
+        if host in self.suspect_hosts:
+            return False
+        self.suspect_hosts.add(host)
+        return True
+
+    def reprioritize_host(self, host: int) -> bool:
+        """A suspect host recovered; restore it for planning."""
+        if host not in self.suspect_hosts:
+            return False
+        self.suspect_hosts.discard(host)
+        return True
 
     def blacklist_link(self, link: LinkId) -> None:
         """C4D verdict -> C4P link blacklist (the detect->avoid composition);

@@ -29,6 +29,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.c4d.master import OperatingPoint
 from repro.core.faults import sample_error_class
 from repro.core.phases import HOURS
 from repro.scenarios.engine import run_scenario
@@ -82,6 +83,11 @@ class CampaignSpec:
     # a streaming window at 1024 ranks costs ~100 ms of wall time (see
     # benchmarks/bench_runtime.py), so 480 ticks/trial adds up.
     streaming_tick_s: float = 30.0
+    # streaming precision pipeline (adaptive baselines + suspect/confirm
+    # state machine) applied to every trial; None keeps the PR 5 behaviour.
+    # The cost-optimal point comes from the ROC sweep
+    # (``scenarios.precision``; CLI ``--sweep`` / ``--operating-point``).
+    operating_point: Optional[OperatingPoint] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -151,6 +157,7 @@ def sample_trial(spec: CampaignSpec, trial: int) -> ScenarioSpec:
         checkpoint_period_s=spec.checkpoint_period_s,
         apply_localization_ceiling=spec.apply_localization_ceiling,
         streaming_tick_s=spec.streaming_tick_s,
+        operating_point=spec.operating_point,
         jobs=(JobSpec(0, tuple(range(spec.n_hosts))),),
         events=tuple(events),
     )
@@ -203,14 +210,16 @@ def names() -> List[str]:
 
 
 def get(name: str, seed: Optional[int] = None, n_trials: Optional[int] = None,
-        gpus: Optional[int] = None) -> CampaignSpec:
+        gpus: Optional[int] = None,
+        operating_point: Optional[OperatingPoint] = None) -> CampaignSpec:
     """Look up a shipped campaign, with CLI-style overrides applied."""
     try:
         spec = _REGISTRY[name]()
     except KeyError:
         raise KeyError(f"unknown campaign {name!r}; choose from {names()}")
     over = {k: v for k, v in
-            (("seed", seed), ("n_trials", n_trials), ("gpus", gpus))
+            (("seed", seed), ("n_trials", n_trials), ("gpus", gpus),
+             ("operating_point", operating_point))
             if v is not None}
     return dataclasses.replace(spec, **over) if over else spec
 

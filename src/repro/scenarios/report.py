@@ -197,3 +197,58 @@ def render_markdown(rep: dict) -> str:
             f"/{t['false_negatives']} | {t['goodput_frac']:.3f} | {gain} |")
     out.append("")
     return "\n".join(out)
+
+
+def _sweep_row(p: dict, marker: str = "") -> str:
+    lat = p["latency_windows"]
+    return (f"| {p['label']}{marker} | {p['fault_free_fp_rate']:.4f} "
+            f"| {p['recall']:.3f} | {p['clean_recall']:.3f} "
+            f"| {p['marginal_detected']}/{p['marginal_episodes']} "
+            f"| {p['precision']:.3f} "
+            f"| {_fmt(lat['p50'], 1)} / {_fmt(lat['p99'], 1)} "
+            f"| {p['monthly_cost_gpu_h']:.0f} |")
+
+
+def render_sweep_markdown(rep: dict) -> str:
+    """Markdown for an ROC sweep-report JSON dict (``SweepReport.to_json``
+    shape; ``experiments/summarize.py --campaign`` detects it by its
+    ``points`` key)."""
+    if hasattr(rep, "to_json"):         # accept the live report object too
+        rep = rep.to_json()
+    sw = rep["sweep"]
+    sel = rep["selected"]
+    out = [
+        f"# ROC sweep `{sw['name']}`",
+        "",
+        f"{sw.get('description', '')}",
+        "",
+        f"*{sw['n_trials']} trials x {len(rep['points'])} grid points · "
+        f"seed {sw['seed']} · {sw['windows']} windows/trial · "
+        f"paper: {sw.get('paper_ref', '')}*",
+        "",
+        f"Selected operating point: **`{sel['label']}`** — fault-free FP "
+        f"rate {sel['fault_free_fp_rate']:.4f} (target <= {sw['fp_target']}),"
+        f" recall {sel['recall']:.3f} (clean {sel['clean_recall']:.3f}), "
+        f"latency p99 {_fmt(sel['latency_windows']['p99'], 1)} windows, "
+        f"{sel['monthly_cost_gpu_h']:.0f} GPU-h/month at "
+        f"{sw['cost']['fleet_gpus']} GPUs.  Targets "
+        f"{'met' if rep['meets_targets'] else 'NOT met'}.",
+        "",
+        "| operating point | FP rate | recall | clean | marginal "
+        "| precision | latency p50/p99 (w) | cost (GPU-h/mo) |",
+        "|---|---|---|---|---|---|---|---|",
+        _sweep_row(rep["reference"]),
+    ]
+    for p in rep["points"]:
+        out.append(_sweep_row(
+            p, marker=" ◀" if p["label"] == sel["label"] else ""))
+    out += [
+        "",
+        "Reference row is the pinned PR 5 cross-sectional detector "
+        "(single-window robust-z, streak 2).  Cost prices false isolations "
+        "at the Table-3 restart tail and missed faults at the "
+        "BASELINE_JUN23 MTTR counterfactual; the marginal column counts "
+        "near-threshold episodes only.",
+        "",
+    ]
+    return "\n".join(out)

@@ -13,6 +13,20 @@ Monte Carlo campaigns (randomized trial populations, docs/campaigns.md):
     PYTHONPATH=src python -m repro.scenarios.run --campaign fleet_1024 \
         --trials 64 --gpus 1024 --workers 4 --json reports/ --md reports/
 
+ROC sweeps (paired operating-point grids, docs/detection.md "Precision"):
+
+    PYTHONPATH=src python -m repro.scenarios.run --sweep roc_smoke
+    PYTHONPATH=src python -m repro.scenarios.run --sweep detector_stress_roc \
+        --json reports/ --md reports/
+    PYTHONPATH=src python -m repro.scenarios.run --campaign fleet_smoke \
+        --operating-point "mad=6,streak=3,hl=16"
+
+``--sweep`` exits non-zero when the selected point misses its targets
+(FP <= fp_target at reference clean recall within the latency budget);
+``--operating-point`` applies a parsed ``OperatingPoint`` to every
+scenario and campaign in the same invocation, so a sweep winner can be
+cross-checked on the drill library and the full fleet engine.
+
 Per-scenario reports carry detection latency, localisation verdicts, the
 Table-3 downtime phase breakdown, and effective goodput; campaign reports
 carry the fleet aggregates (detection precision/recall, MTTR percentiles,
@@ -33,7 +47,7 @@ import sys
 import time
 from typing import List
 
-from repro.scenarios import library, montecarlo
+from repro.scenarios import library, montecarlo, precision
 from repro.scenarios.engine import run_scenario
 
 
@@ -121,6 +135,12 @@ def main(argv=None) -> int:
     ap.add_argument("--all", action="store_true", help="run every scenario")
     ap.add_argument("--campaign", action="append", default=[],
                     help="Monte Carlo campaign name (repeatable)")
+    ap.add_argument("--sweep", action="append", default=[],
+                    help="ROC operating-point sweep name (repeatable)")
+    ap.add_argument("--operating-point", default=None, metavar="SPEC",
+                    help="apply a detection operating point to scenarios "
+                         "and campaigns, e.g. 'mad=6,streak=3,hl=16' "
+                         "(keys: mad, suspect, streak, hang, hl, warm)")
     ap.add_argument("--trials", type=int, default=None,
                     help="override the campaign's trial count")
     ap.add_argument("--gpus", type=int, default=None,
@@ -155,16 +175,28 @@ def main(argv=None) -> int:
             cam = montecarlo.get(name)
             print(f"{name:28s} [campaign: {cam.n_trials} trials x "
                   f"{cam.gpus} GPUs] {cam.paper_ref}")
+        for name in precision.names():
+            sw = precision.get(name)
+            print(f"{name:28s} [sweep: {sw.n_trials} trials x "
+                  f"{len(sw.grid())} points] {sw.paper_ref}")
         return 0
 
     targets = library.names() if args.all else args.scenario
-    if not targets and not args.campaign:
+    if not targets and not args.campaign and not args.sweep:
         ap.error("nothing to do: pass --list, --scenario NAME, "
-                 "--campaign NAME, or --all")
+                 "--campaign NAME, --sweep NAME, or --all")
+
+    op = None
+    if args.operating_point:
+        from repro.core.c4d.master import OperatingPoint
+        op = OperatingPoint.parse(args.operating_point)
 
     failed: List[str] = []
     for name in targets:
         spec = library.get(name, seed=args.seed if args.seed is not None else 0)
+        if op is not None:
+            import dataclasses
+            spec = dataclasses.replace(spec, operating_point=op)
         rep = run_scenario(spec)
         if args.live:
             import tempfile
@@ -186,7 +218,7 @@ def main(argv=None) -> int:
 
     for name in args.campaign:
         cam = montecarlo.get(name, seed=args.seed, n_trials=args.trials,
-                             gpus=args.gpus)
+                             gpus=args.gpus, operating_point=op)
         t0 = time.perf_counter()
         report = montecarlo.run_campaign(cam, workers=max(args.workers, 1))
         wall = time.perf_counter() - t0
@@ -201,8 +233,27 @@ def main(argv=None) -> int:
         if args.md:
             _write_text(report.to_markdown(), args.md, cam.name)
 
+    for name in args.sweep:
+        sw = precision.get(name, seed=args.seed, n_trials=args.trials)
+        t0 = time.perf_counter()
+        srep = precision.run_sweep(sw)
+        wall = time.perf_counter() - t0
+        if args.json != "-" and args.md != "-":
+            for line in srep.summary_lines():
+                print(line)
+            print(f"wall          : {wall:.1f} s "
+                  f"({sw.n_trials} trials x {len(srep.points) + 1} points)")
+            print()
+        if args.json:
+            _write_json(srep.to_json(), args.json, sw.name)
+        if args.md:
+            from repro.scenarios.report import render_sweep_markdown
+            _write_text(render_sweep_markdown(srep), args.md, sw.name)
+        if not srep.meets_targets:
+            failed.append(name)
+
     if failed and not args.no_assert:
-        print(f"scenario assertions failed: {failed}", file=sys.stderr)
+        print(f"assertions failed: {failed}", file=sys.stderr)
         return 1
     return 0
 

@@ -30,12 +30,14 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
-from repro.core.c4d.master import C4DMaster
+from repro.core.c4d.master import (ACTION_DEPRIORITIZE, ACTION_ISOLATE,
+                                   ACTION_REPRIORITIZE, C4DMaster)
 from repro.core.faults import TABLE1, Fault, RingJobTelemetry, fault_for_class
 from repro.runtime import Service
 from repro.scenarios.services.context import RunContext
 from repro.scenarios.services.events import (FabricTransient, FaultDetected,
-                                             JobResumed, LinkObserved)
+                                             JobResumed, LinkObserved,
+                                             NodeCleared, NodeSuspected)
 from repro.scenarios.spec import InjectFault, StopJob
 
 ERROR_CLASSES = {c.name: c for c in TABLE1}
@@ -53,6 +55,7 @@ class ActiveFault:
     kind: str
     error_class: Optional[str]
     detected_t: Optional[float] = None
+    suspected_t: Optional[float] = None      # precision pipeline only
 
     def record(self) -> dict:
         det = self.detected_t
@@ -62,6 +65,7 @@ class ActiveFault:
                 else list(self.fault.link or ()),
                 "expected_node": self.expected_node,
                 "onset_t": self.onset_t, "detected_t": det,
+                "suspected_t": self.suspected_t,
                 "latency_s": None if det is None else det - self.onset_t}
 
 
@@ -75,11 +79,18 @@ class C4DService(Service):
         self.network_records: List[dict] = []
         # ---- streaming state (own telemetry stream + persistent master)
         self.tick_period_s = float(spec.streaming_tick_s)
+        self.operating_point = spec.operating_point
         if self.tick_period_s > 0:
             self.stream_tel = RingJobTelemetry(n_ranks=spec.telemetry_ranks,
                                                seed=spec.seed + 2)
-            self.stream_master = C4DMaster(n_ranks=spec.telemetry_ranks,
-                                           ranks_per_node=spec.ranks_per_node)
+            if self.operating_point is not None:
+                self.stream_master = C4DMaster.from_operating_point(
+                    self.operating_point, n_ranks=spec.telemetry_ranks,
+                    ranks_per_node=spec.ranks_per_node)
+            else:
+                self.stream_master = C4DMaster(
+                    n_ranks=spec.telemetry_ranks,
+                    ranks_per_node=spec.ranks_per_node)
         self.active: List[ActiveFault] = []
         self.closed: List[ActiveFault] = []
         self.pending_transients: List[Fault] = []
@@ -89,6 +100,9 @@ class C4DService(Service):
         self.down_windows = 0
         self.fp_windows = 0
         self.link_windows = 0        # windows with a matching link verdict
+        # precision pipeline (suspect stage) bookkeeping
+        self.suspect_windows = 0
+        self.false_suspect_windows = 0
 
     # ------------------------------------------------------------------
     # per-fault reference path (bit-compatible with the legacy engine)
@@ -217,16 +231,34 @@ class C4DService(Service):
         win = self.stream_tel.window_arrays(window_id=self.windows,
                                             faults=faults)
         actions = self.stream_master.ingest(win)
+        # graded actions (precision branch only; the legacy master emits
+        # isolate_restart exclusively, so these lists stay empty and no
+        # extra events perturb the pinned PR 5 traces)
+        isolates = [a for a in actions if a.action == ACTION_ISOLATE]
+        suspects = [a for a in actions if a.action == ACTION_DEPRIORITIZE]
+        for a in suspects:
+            score = max((v.score for v in a.verdicts), default=0.0)
+            self.kernel.publish(NodeSuspected(a.node_id, score=score))
+        for a in actions:
+            if a.action == ACTION_REPRIORITIZE:
+                self.kernel.publish(NodeCleared(a.node_id))
+        if suspects:
+            self.suspect_windows += 1
         if not faults:
             self.fault_free_windows += 1
-            if actions:
+            if isolates:
                 self.fp_windows += 1
+            elif suspects:
+                self.false_suspect_windows += 1
             return
         self.fault_windows += 1
-        acted_nodes = {a.node_id for a in actions}
+        acted_nodes = {a.node_id for a in isolates}
+        suspect_nodes = {a.node_id for a in suspects}
         for af in self.active:
             if af.detected_t is None and af.expected_node in acted_nodes:
                 af.detected_t = t
+            if af.suspected_t is None and af.expected_node in suspect_nodes:
+                af.suspected_t = t
         verdict_links = {v.link for a in actions for v in a.verdicts
                          if v.link is not None}
         fault_links = {f.link for f in faults if f.link is not None}
@@ -258,6 +290,13 @@ class C4DService(Service):
             "missed": missed,
             "latencies_s": lat,
             "link_observation_windows": self.link_windows,
+            # precision pipeline (all-zero/None under the legacy master)
+            "operating_point":
+                self.operating_point.to_dict()
+                if self.operating_point is not None else None,
+            "suspect_windows": self.suspect_windows,
+            "false_suspect_windows": self.false_suspect_windows,
+            "suspect_replans": self.ctx.suspect_replans,
             "faults": recs,
         }
 

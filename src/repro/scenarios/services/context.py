@@ -73,6 +73,10 @@ class RunContext:
         self.jobs: Dict[int, JobRun] = {}
         self.finished: List[JobRun] = []
         self.last_result = None             # latest steady-state RateResult
+        # precision pipeline bookkeeping (written by FabricService): how
+        # many fabric re-plans were triggered by suspect escalations —
+        # the measured cost of a streaming false positive short of restart
+        self.suspect_replans = 0
 
     # ------------------------------------------------------------------
     def bridge_for(self, run: JobRun,

@@ -12,6 +12,9 @@ onto the kernel verbatim by the composition root.  This module defines the
     FabricTransient  fabric: post-flap rates before the control plane reacts
     LinkObserved     c4d: did detection observe a fabric degradation?
     BusbwChanged     fabric: fresh per-job busbw after a re-plan
+    NodeSuspected    c4d: precision state machine escalated a node to
+                     *suspect* — fabric deprioritizes it (re-plan, not restart)
+    NodeCleared      c4d: a suspect node de-escalated back to healthy
 
 Events are plain frozen dataclasses; bulky payloads define ``trace_label``
 so the kernel's determinism trace stays compact but bit-stable.
@@ -92,6 +95,23 @@ class LinkObserved:
     job_id: int
     acted: bool
     edge_hit: bool
+
+
+@dataclass(frozen=True)
+class NodeSuspected:
+    """The streaming C4D precision state machine (``OperatingPoint``)
+    escalated a telemetry node to *suspect*: graceful degradation — the
+    fabric steers traffic away from the node's host before any isolation
+    decision, so a false positive costs a re-plan, not a restart."""
+    node: int
+    score: float = 0.0               # strongest verdict z behind the streak
+
+
+@dataclass(frozen=True)
+class NodeCleared:
+    """A suspect node's streak decayed back to zero: recovered — the
+    fabric restores it for traffic planning."""
+    node: int
 
 
 @dataclass(frozen=True)

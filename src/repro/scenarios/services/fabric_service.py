@@ -20,6 +20,7 @@ from repro.runtime import Service
 from repro.scenarios.services.context import RunContext
 from repro.scenarios.services.events import (BusbwChanged, FabricTransient,
                                              JobAdmitted, LinkObserved,
+                                             NodeCleared, NodeSuspected,
                                              admitted_spec)
 from repro.scenarios.spec import (FailLink, JobSpec, RestoreLink, StartJob,
                                   StopJob)
@@ -48,6 +49,10 @@ class FabricService(Service):
             # C4D verdict -> C4P link blacklist (the detect->avoid
             # composition; a no-op under ECMP)
             self.ctx.fabric.blacklist_link(event.link)
+        elif isinstance(event, NodeSuspected):
+            self._deprioritize(event.node)
+        elif isinstance(event, NodeCleared):
+            self._reprioritize(event.node)
 
     # ---- job churn ---------------------------------------------------
     def _admit(self, jspec: JobSpec) -> None:
@@ -87,6 +92,41 @@ class FabricService(Service):
         self.ctx.fabric.restore_link(ev.link)
         self.ctx.fabric.probe_refresh()       # mark-up via probe report
         self.reevaluate()
+
+    # ---- graceful degradation (precision pipeline) -------------------
+    def _host_of_node(self, node: int) -> Optional[int]:
+        """Map a streaming telemetry node back to the testbed host that
+        carries its ranks (inverse of ``_admit``'s host_to_rank layout)."""
+        ctx = self.ctx
+        lead_rank = node * ctx.spec.ranks_per_node
+        for run in ctx.focus_runs():
+            if not run.host_to_rank:
+                continue
+            step = max(ctx.spec.telemetry_ranks // len(run.host_to_rank), 1)
+            for h, r0 in run.host_to_rank.items():
+                if r0 <= lead_rank < r0 + step:
+                    return h
+        return None
+
+    def _deprioritize(self, node: int) -> None:
+        """A suspect node is steered around, not restarted: probe sweep +
+        immediate re-plan.  A genuinely degrading NIC gets marked down by
+        the probe report and traffic moves off it; for a false positive the
+        re-plan is a no-op on rates — the whole cost of the false alarm."""
+        host = self._host_of_node(node)
+        if host is None or not self.ctx.fabric.deprioritize_host(host):
+            return
+        self.ctx.fabric.probe_refresh()
+        self.reevaluate()
+        self.ctx.suspect_replans += 1
+
+    def _reprioritize(self, node: int) -> None:
+        host = self._host_of_node(node)
+        if host is None or not self.ctx.fabric.reprioritize_host(host):
+            return
+        self.ctx.fabric.probe_refresh()       # mark-up pass before re-plan
+        self.reevaluate()
+        self.ctx.suspect_replans += 1
 
     # ---- evaluation --------------------------------------------------
     def reevaluate(self, first_for: Optional[int] = None) -> None:

@@ -11,6 +11,8 @@ from __future__ import annotations
 from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.c4d.master import OperatingPoint
+
 # ---------------------------------------------------------------------------
 # Timed events
 # ---------------------------------------------------------------------------
@@ -133,6 +135,9 @@ class ScenarioSpec:
     bridge_threshold: float = 1.8             # conn-rate ratio -> telemetry fault
     streaming_tick_s: float = 30.0            # always-on C4D sampling period
     #                                           (0 disables the streaming path)
+    # precision pipeline for the streaming master (adaptive baselines +
+    # suspect/confirm state machine); None keeps the pinned PR 5 behaviour
+    operating_point: Optional[OperatingPoint] = None
 
     jobs: Tuple[JobSpec, ...] = ()
     events: Tuple[Event, ...] = ()

@@ -31,6 +31,8 @@ column).
 """
 from __future__ import annotations
 
+import dataclasses
+from dataclasses import dataclass
 from typing import List
 
 import numpy as np
@@ -86,6 +88,74 @@ def baseline_fault_downtime_s(fault: dict,
             + fault["phases"]["re_initialization_s"])
 
 
+@dataclass(frozen=True)
+class DetectionCostModel:
+    """GPU-hour pricing of one streaming operating point (docs/detection.md
+    "Precision").
+
+    The ROC sweep trades three failure costs measured in fleet GPU-hours
+    per month, all derived from the repo's existing accounting constants
+    rather than fresh literals:
+
+      * **false isolation** — the detector restarts a healthy node: the
+        fleet pays the isolate -> swap -> re-init tail of the Table-3 cycle
+        (``core/phases.py`` keys ``diagnosis_isolation_s`` +
+        ``lost_progress_s`` + ``re_initialization_s`` under the
+        ``C4D_DEC23`` policy).
+      * **missed fault** — the fault falls back to the no-C4D path: the
+        ``BASELINE_JUN23`` MTTR counterfactual (elastic-agent timeout or
+        crash notice, manual diagnosis, infrequent-checkpoint loss, legacy
+        re-init) minus what C4D handling would have cost.
+      * **deliberation** — each extra confirmation window delays every
+        *true* isolation by one monitoring period.
+    """
+    fleet_gpus: int = 1024
+    window_period_s: float = 30.0
+    faults_per_month: float = C4D_DEC23.errors_per_month
+    hang_fraction: float = 0.2          # TABLE1: nccl_timeout probability
+    steering_s: float = 120.0           # isolate + backup swap orchestration
+    isolation_diag_s: float = 300.0     # E[U(2, 8) min] assisted isolation
+
+    def false_isolation_s(self) -> float:
+        """Downtime one false isolation inflicts on the job (seconds)."""
+        return (self.steering_s + self.isolation_diag_s
+                + 0.5 * C4D_DEC23.checkpoint_period_s + C4D_DEC23.reinit_s)
+
+    def missed_fault_s(self) -> float:
+        """Marginal downtime of a fault the streaming detector misses:
+        baseline (manual) MTTR expectation minus the C4D handling it
+        forfeited."""
+        b = BASELINE_JUN23
+        baseline = (self.hang_fraction * b.hang_timeout_s
+                    + (1.0 - self.hang_fraction) * b.crash_notice_s
+                    + b.manual_diag_median_s + 0.5 * b.checkpoint_period_s
+                    + b.reinit_s)
+        c4d = 2.0 * self.window_period_s + self.false_isolation_s()
+        return baseline - c4d
+
+    def monthly_cost_gpu_h(self, fp_rate: float, recall: float,
+                           mean_latency_s: float) -> float:
+        """Expected fleet GPU-hours burned per month at one operating point.
+
+        False-positive events are capped at one per restart cycle — a job
+        mid-restart produces no healthy windows to false-positive on."""
+        windows_per_month = MONTH_S / self.window_period_s
+        fp_events = min(fp_rate * windows_per_month,
+                        MONTH_S / self.false_isolation_s())
+        misses = (1.0 - recall) * self.faults_per_month
+        detected = recall * self.faults_per_month
+        downtime_s = (fp_events * self.false_isolation_s()
+                      + misses * self.missed_fault_s()
+                      + detected * mean_latency_s)
+        return self.fleet_gpus * downtime_s / 3600.0
+
+    def to_dict(self) -> dict:
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
+        d["false_isolation_s"] = self.false_isolation_s()
+        d["missed_fault_s"] = self.missed_fault_s()
+        return d
+
+
 def trial_metrics(report: dict) -> dict:
     """Flatten one scenario-engine report into a compact per-trial record.
 
@@ -123,6 +193,11 @@ def trial_metrics(report: dict) -> dict:
         "streaming_missed": streaming.get("missed", 0),
         "streaming_fault_free_windows": streaming.get("fault_free_windows", 0),
         "streaming_fp_windows": streaming.get("false_positive_windows", 0),
+        # precision pipeline (zero under the legacy streaming master)
+        "streaming_suspect_windows": streaming.get("suspect_windows", 0),
+        "streaming_false_suspect_windows":
+            streaming.get("false_suspect_windows", 0),
+        "streaming_suspect_replans": streaming.get("suspect_replans", 0),
     }
     if "ab" in report:
         out["ab_gain_pct"] = report["ab"]["gain_pct"]
@@ -203,6 +278,9 @@ def aggregate(trials: List[dict]) -> dict:
     s_miss = sum(t.get("streaming_missed", 0) for t in trials)
     s_ffw = sum(t.get("streaming_fault_free_windows", 0) for t in trials)
     s_fpw = sum(t.get("streaming_fp_windows", 0) for t in trials)
+    s_susp = sum(t.get("streaming_suspect_windows", 0) for t in trials)
+    s_fsusp = sum(t.get("streaming_false_suspect_windows", 0) for t in trials)
+    s_replans = sum(t.get("streaming_suspect_replans", 0) for t in trials)
     streaming = {
         "latency_s": percentiles(s_lat),
         "detected": s_det, "missed": s_miss,
@@ -210,6 +288,10 @@ def aggregate(trials: List[dict]) -> dict:
         "fault_free_windows": s_ffw,
         "false_positive_windows": s_fpw,
         "fault_free_fp_rate": s_fpw / s_ffw if s_ffw else None,
+        "suspect_windows": s_susp,
+        "false_suspect_windows": s_fsusp,
+        "false_suspect_rate": s_fsusp / s_ffw if s_ffw else None,
+        "suspect_replans": s_replans,
     }
 
     # -- error-induced overhead: measured C4D downtime vs the no-C4D

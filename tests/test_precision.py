@@ -1,0 +1,342 @@
+"""Precision pipeline: adaptive baselines, graded confirmation, ROC sweep.
+
+Everything here is opt-in behind ``OperatingPoint``; the first section
+pins that the default (``operating_point=None``) path is untouched.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.c4d.baseline import AdaptiveBaseline
+from repro.core.c4d.detector import (C4DDetector, DelayMatrixDetector,
+                                     DetectorConfig, RingWaitDetector,
+                                     Verdict, COMM_HANG, COMM_SLOW_SRC)
+from repro.core.c4d.master import (ACTION_DEPRIORITIZE, ACTION_ISOLATE,
+                                   ACTION_REPRIORITIZE, C4DMaster,
+                                   OperatingPoint, SUSPECT)
+from repro.core.faults import Fault, RingJobTelemetry
+from repro.scenarios import library, precision
+from repro.scenarios.engine import CampaignEngine, build_services, run_scenario
+from repro.scenarios.report import render_sweep_markdown
+from repro.scenarios.stats import DetectionCostModel
+
+
+# ---------------------------------------------------------------------------
+# the default path stays pinned
+# ---------------------------------------------------------------------------
+
+def test_detector_configs_are_not_shared_between_instances():
+    a, b = C4DDetector(), C4DDetector()
+    assert a.cfg is not b.cfg
+    a.cfg.mad_threshold = 99.0
+    assert b.cfg.mad_threshold == DetectorConfig().mad_threshold
+    assert DelayMatrixDetector().cfg is not RingWaitDetector().cfg
+
+
+def test_default_master_has_no_precision_state():
+    m = C4DMaster(n_ranks=16)
+    assert m.operating_point is None and m.baseline is None
+    assert m.confirm_windows == 2            # the pinned PR 5 streak
+
+
+def test_legacy_and_default_construction_agree():
+    """The refactor (None-sentinel cfg, baseline plumbing) must leave the
+    default verdict stream byte-identical to an explicit legacy config."""
+    out = []
+    for det in (C4DDetector(), C4DDetector(DetectorConfig())):
+        tel = RingJobTelemetry(n_ranks=16, seed=5)
+        wins = [tel.window_arrays(window_id=i,
+                                  faults=[Fault("slow_src", rank=3,
+                                                severity=8.0)]
+                                         if i >= 2 else [])
+                for i in range(5)]
+        out.append([det.analyze(w, n_ranks=16) for w in wins])
+    assert repr(out[0]) == repr(out[1])
+
+
+# ---------------------------------------------------------------------------
+# adaptive baselines
+# ---------------------------------------------------------------------------
+
+def test_adaptive_baseline_learns_persistent_skew():
+    """A rank that is always 2x slower is its own normal: cross-sectional z
+    keeps flagging it, the adaptive z stops after warm-up."""
+    rng = np.random.default_rng(0)
+    base = np.ones((8, 8))
+    base[3, :] = 2.0                        # persistently slow source row
+    bl = AdaptiveBaseline(8, half_life=4.0, warm_windows=3)
+    for _ in range(20):
+        bl.update("delay", base * (1 + 0.02 * rng.standard_normal((8, 8))))
+    z = bl.z("delay", base * 1.0)
+    assert bl.warm("delay").all()
+    assert np.abs(z).max() < 3.0            # skewed row: no alarm
+    step = base.copy()
+    step[5, 2] *= 1.5                       # fresh 1.5x step change
+    assert bl.z("delay", step)[5, 2] > 5.0  # fires immediately
+
+
+def test_adaptive_baseline_winsorizes_fault_absorption():
+    """A live fault bleeds into its own baseline at a bounded rate: after
+    an 8-window episode at 10x the cell must still score far above any
+    threshold (the streak confirms long before the fault 'heals')."""
+    rng = np.random.default_rng(1)
+    bl = AdaptiveBaseline(4, half_life=8.0, warm_windows=3)
+    for _ in range(10):
+        bl.update("delay", 1 + 0.02 * rng.standard_normal((4, 4)))
+    hot = np.ones((4, 4))
+    hot[1, 2] = 10.0
+    for _ in range(8):
+        z = bl.z("delay", hot)
+        assert z[1, 2] > 20.0
+        bl.update("delay", hot)
+
+
+def test_adaptive_baseline_rejects_nonpositive_half_life():
+    with pytest.raises(ValueError):
+        AdaptiveBaseline(8, half_life=0.0)
+
+
+def test_baseline_warmup_falls_back_to_cross_sectional_z():
+    bl = AdaptiveBaseline(4, half_life=8.0, warm_windows=3)
+    vals = np.ones((4, 4))
+    fb = np.full((4, 4), 7.0)
+    assert np.array_equal(bl.z("delay", vals, fallback=fb), fb)
+
+
+# ---------------------------------------------------------------------------
+# operating points
+# ---------------------------------------------------------------------------
+
+def test_operating_point_parse_round_trip():
+    op = OperatingPoint.parse("mad=6, streak=3, hl=16")
+    assert op == OperatingPoint(mad_threshold=6.0, confirm_streak=3,
+                                baseline_half_life=16.0)
+    assert op.label() == "mad=6,streak=3,hl=16"
+    assert OperatingPoint.parse(op.label()) == op
+    assert OperatingPoint(**op.to_dict()) == op
+
+
+def test_operating_point_parse_rejects_unknown_keys():
+    with pytest.raises(ValueError):
+        OperatingPoint.parse("mad=6,bogus=1")
+    with pytest.raises(ValueError):
+        OperatingPoint.parse("mad6")
+
+
+# ---------------------------------------------------------------------------
+# the graded state machine (golden transitions)
+# ---------------------------------------------------------------------------
+
+def _graded_master(**kw):
+    base = dict(suspect_streak=1, confirm_streak=3, hang_streak=1,
+                baseline_half_life=0.0)
+    base.update(kw)
+    return C4DMaster.from_operating_point(OperatingPoint(**base), n_ranks=16)
+
+
+def _slow(node, rank=None):
+    return {node: [Verdict(COMM_SLOW_SRC, rank=rank if rank is not None
+                           else node * 8, score=9.0)]}
+
+
+def test_streak_escalates_healthy_suspect_confirmed():
+    m = _graded_master()
+    a1 = m._confirm_graded(_slow(0))
+    assert [a.action for a in a1] == [ACTION_DEPRIORITIZE]
+    assert m.node_states() == {0: SUSPECT}
+    assert m._confirm_graded(_slow(0)) == []      # streak 2: deliberating
+    a3 = m._confirm_graded(_slow(0))
+    assert [a.action for a in a3] == [ACTION_ISOLATE]
+    assert m.node_states() == {}                  # track retired on isolate
+
+
+def test_clean_windows_decay_and_clear_suspects():
+    m = _graded_master()
+    m._confirm_graded(_slow(0))
+    m._confirm_graded(_slow(0))                   # streak 2, suspect
+    assert m._confirm_graded({}) == []            # decay to 1
+    a = m._confirm_graded({})                     # decay to 0: cleared
+    assert [x.action for x in a] == [ACTION_REPRIORITIZE]
+    assert m.node_states() == {}
+    # jitter-only evidence that never reaches confirm_streak never isolates
+    for _ in range(10):
+        acts = m._confirm_graded(_slow(1))
+        assert all(x.action != ACTION_ISOLATE for x in acts)
+        m._confirm_graded({})
+        m._confirm_graded({})
+
+
+def test_intermittent_fault_still_accumulates_evidence():
+    """50% duty cycle with decay=1 oscillates between 1 and 2 forever —
+    but decay below the duty rate lets the streak ratchet up."""
+    m = _graded_master(confirm_streak=4)
+    seq = []
+    for _ in range(12):
+        seq += [a.action for a in m._confirm_graded(_slow(2))]
+        seq += [a.action for a in m._confirm_graded({})]
+        m.operating_point = dataclasses.replace(m.operating_point, decay=0)
+    assert ACTION_ISOLATE in seq
+
+
+def test_hang_uses_its_own_short_streak():
+    m = _graded_master()
+    acts = m._confirm_graded({1: [Verdict(COMM_HANG, rank=9, score=1.0)]})
+    assert [a.action for a in acts] == [ACTION_ISOLATE]
+
+
+def test_graded_end_to_end_on_real_telemetry():
+    """Through ``ingest``: a hard fault walks healthy -> suspect ->
+    confirmed on consecutive windows.  Jitter may raise transient
+    *suspects* during warm-up — that is the design (a re-plan, not a
+    restart) — but must never isolate."""
+    op = OperatingPoint(mad_threshold=5.0, suspect_streak=1, confirm_streak=3,
+                        baseline_half_life=16.0)
+    m = C4DMaster.from_operating_point(op, n_ranks=16)
+    tel = RingJobTelemetry(n_ranks=16, seed=0)
+    for i in range(8):
+        acts = m.ingest(tel.window_arrays(window_id=i))
+        assert all(a.action != ACTION_ISOLATE for a in acts)
+    fault = [Fault("slow_src", rank=5, severity=10.0)]
+
+    def node0(actions):
+        return [a.action for a in actions if a.node_id == 0]
+
+    a1 = node0(m.ingest(tel.window_arrays(window_id=8, faults=fault)))
+    assert a1 == [ACTION_DEPRIORITIZE]
+    assert m.node_states()[0] == SUSPECT
+    a2 = node0(m.ingest(tel.window_arrays(window_id=9, faults=fault)))
+    assert a2 == []
+    a3 = node0(m.ingest(tel.window_arrays(window_id=10, faults=fault)))
+    assert a3 == [ACTION_ISOLATE]
+
+
+# ---------------------------------------------------------------------------
+# runtime integration: suspects cost a re-plan, not a restart
+# ---------------------------------------------------------------------------
+
+OP = OperatingPoint(mad_threshold=6.0, confirm_streak=3,
+                    baseline_half_life=16.0)
+
+
+def _with_op(spec):
+    return dataclasses.replace(spec, operating_point=OP)
+
+
+def test_scenario_with_operating_point_keeps_recall_and_cuts_fp():
+    ref = run_scenario(library.get("silent_pcie_degradation"))
+    out = run_scenario(_with_op(library.get("silent_pcie_degradation")))
+    st_ref, st = ref["streaming"], out["streaming"]
+    assert st["operating_point"] == OP.to_dict()
+    assert st_ref["operating_point"] is None
+    assert st["detected"] >= st_ref["detected"]
+    assert st["missed"] <= st_ref["missed"]
+    assert st["fault_free_fp_rate"] <= st_ref["fault_free_fp_rate"]
+    # the fault was deprioritized (suspect) before isolation, and the
+    # fabric re-planned around it while the job kept running
+    (f,) = st["faults"]
+    assert f["suspected_t"] is not None
+    assert f["detected_t"] is None or f["suspected_t"] <= f["detected_t"]
+    assert st["suspect_windows"] >= 1
+    assert st["suspect_replans"] >= 1
+
+
+def test_quiet_fleet_with_operating_point_is_silent():
+    from repro.scenarios.spec import JobSpec, ScenarioSpec
+    spec = ScenarioSpec(name="quiet", description="", duration_s=1800.0,
+                        jobs=(JobSpec(0, tuple(range(8))),),
+                        operating_point=OP)
+    rep = run_scenario(spec)
+    st = rep["streaming"]
+    assert st["fault_free_fp_rate"] == 0.0
+    assert rep["restarts"] == 0
+
+
+def test_engine_with_operating_point_is_registration_order_invariant():
+    def artifacts(factory=None):
+        spec = _with_op(library.get("ecmp_vs_c4p_ab", seed=3))
+        eng = CampaignEngine(spec, fabric_mode="c4p", service_factory=factory)
+        rep = eng.run()
+        return ("\n".join(eng.kernel.trace_lines()),
+                json.dumps(rep, sort_keys=True, default=str))
+    fwd = artifacts()
+    rev = artifacts(lambda ctx: list(reversed(build_services(ctx))))
+    assert fwd == artifacts() == rev
+
+
+# ---------------------------------------------------------------------------
+# cost model + ROC sweep
+# ---------------------------------------------------------------------------
+
+def test_cost_model_prices_misses_above_false_alarms():
+    cm = DetectionCostModel()
+    assert cm.missed_fault_s() > cm.false_isolation_s()
+    perfect = cm.monthly_cost_gpu_h(0.0, 1.0, 0.0)
+    sloppy = cm.monthly_cost_gpu_h(0.05, 1.0, 0.0)
+    deaf = cm.monthly_cost_gpu_h(0.0, 0.5, 0.0)
+    assert perfect < deaf < sloppy
+    # FP events saturate at one per restart cycle, not at infinity
+    assert cm.monthly_cost_gpu_h(1.0, 1.0, 0.0) \
+        == cm.monthly_cost_gpu_h(0.9, 1.0, 0.0)
+
+
+def _trim(spec):
+    return dataclasses.replace(spec, n_trials=2, windows=80,
+                               mad_thresholds=(5.0, 6.0),
+                               confirm_streaks=(2, 3),
+                               half_lives=(0.0, 16.0))
+
+
+def test_roc_sweep_selects_a_point_meeting_all_targets():
+    spec = _trim(precision.get("roc_smoke"))
+    rep = precision.run_sweep(spec)
+    assert rep.meets_targets
+    sel, ref = rep.selected, rep.reference
+    # the acceptance criteria of the sweep itself
+    assert sel["fault_free_fp_rate"] <= spec.fp_target
+    assert sel["clean_recall"] >= ref["clean_recall"]
+    assert (sel["latency_windows"]["p99"]
+            <= ref["latency_windows"]["p99"] + spec.latency_margin_windows)
+    assert sel["monthly_cost_gpu_h"] <= ref["monthly_cost_gpu_h"]
+    # the winner is the precision pipeline, not the reference re-labelled
+    assert sel["operating_point"] is not None
+    op = precision.selected_operating_point(rep)
+    assert op.label() == sel["label"]
+    # the persistent-skew streams make the cross-sectional reference pay
+    assert ref["fault_free_fp_rate"] > 10 * max(sel["fault_free_fp_rate"],
+                                                spec.fp_target)
+
+
+def test_roc_sweep_is_deterministic():
+    spec = _trim(precision.get("roc_smoke"))
+    a = json.dumps(precision.run_sweep(spec).to_json(), sort_keys=True)
+    b = json.dumps(precision.run_sweep(spec).to_json(), sort_keys=True)
+    assert a == b
+
+
+def test_sweep_streams_have_ground_truth_and_skew():
+    spec = _trim(precision.get("roc_smoke"))
+    stream = precision.synthesize_trial(spec, 0)
+    assert len(stream.windows) == spec.windows
+    assert len(stream.episodes) == spec.episodes_per_trial
+    for ep in stream.episodes:
+        assert all(stream.truth[i] is not None
+                   for i in range(ep.onset, ep.end))
+    assert sum(t is None for t in stream.truth) > spec.windows // 2
+
+
+def test_sweep_markdown_renders_reference_and_selection():
+    spec = _trim(precision.get("roc_smoke"))
+    rep = precision.run_sweep(spec)
+    md = render_sweep_markdown(rep.to_json())
+    assert "pr5_reference" in md
+    assert rep.selected["label"] + " ◀" in md
+    assert str(spec.fp_target) in md
+
+
+def test_sweep_registry_lists_shipped_sweeps():
+    assert "roc_smoke" in precision.names()
+    assert "detector_stress_roc" in precision.names()
+    with pytest.raises(KeyError):
+        precision.get("no_such_sweep")

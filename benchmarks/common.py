@@ -13,11 +13,20 @@ from typing import Callable, Dict, List
 # (benchmarks.run --json) for the CI perf artifact
 ROWS: List[Dict[str, object]] = []
 
+# run-wide provenance stamped into every row (benchmarks.run fills it in):
+# the resolved kernel backend and the installed jax version (None when jax
+# is absent) — so a perf artifact is self-describing about what it measured
+CONTEXT: Dict[str, object] = {"backend": "numpy", "jax": None}
+
+
+def set_context(**kw: object) -> None:
+    CONTEXT.update(kw)
+
 
 def emit(name: str, us_per_call: float, derived: Dict[str, object]) -> None:
     d = "|".join(f"{k}={v}" for k, v in derived.items())
     ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
-                 "derived": dict(derived)})
+                 "derived": dict(derived), **CONTEXT})
     print(f"{name},{us_per_call:.1f},{d}", flush=True)
 
 

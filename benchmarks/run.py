@@ -1,10 +1,22 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig9] [--quick]
+    PYTHONPATH=src python -m benchmarks.run --quick --check benchmarks/baselines.json
 
 ``--quick`` shrinks every benchmark's seed/scenario grid (same code paths,
-fewer repeats) so the whole suite lands in about a minute — the mode the
+fewer repeats) so the whole suite lands in a few minutes — the mode the
 smoke script (scripts/perf_smoke.sh) uses for reproducible perf numbers.
+
+``--check`` compares the run's rows against the committed wall-clock
+budgets (benchmarks/baselines.json) and exits non-zero on any regression —
+a budgeted row that is missing, errored, or slower than its ``max_us``.
+Budgets carry generous headroom over measured dev-box numbers (see the
+baselines file), so the gate catches order-of-magnitude regressions (an
+accidental de-vectorization, a jit cache miss per call), not CI noise.
+
+``--backend`` flips the simulation kernel default (``repro.core.jaxsim``)
+for the whole run; the resolved backend and the installed jax version are
+stamped into every CSV/JSON row (benchmarks/common.py ``CONTEXT``).
 
 Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
 """
@@ -15,6 +27,7 @@ import importlib
 import json
 import sys
 import traceback
+from typing import Dict, List
 
 from benchmarks import common
 
@@ -29,7 +42,33 @@ BENCHES = [
     ("fig13", "benchmarks.bench_fig13_jobs"),
     ("detection", "benchmarks.bench_detection_latency"),
     ("campaign", "benchmarks.bench_campaign"),
+    ("jaxsim", "benchmarks.bench_jaxsim"),
 ]
+
+
+def check_rows(rows: List[Dict[str, object]], budgets: Dict[str, dict],
+               only: str = None) -> List[str]:
+    """Compare emitted rows against the committed budgets.
+
+    Returns human-readable violation strings (empty = gate passes).  A
+    budgeted row that did not run at all is a violation too — a silently
+    dropped benchmark must not read as a pass.  With ``only`` set, budgets
+    for other tags are skipped (partial runs stay checkable)."""
+    by_name = {r["name"]: r for r in rows}
+    out = []
+    for name, budget in sorted(budgets.items()):
+        if only is not None and name.split("/", 1)[0] != only:
+            continue
+        row = by_name.get(name)
+        if row is None:
+            out.append(f"{name}: budgeted row missing from this run")
+            continue
+        us = float(row["us_per_call"])
+        max_us = float(budget["max_us"])
+        if us > max_us:
+            out.append(f"{name}: {us:.0f} us/call exceeds budget "
+                       f"{max_us:.0f} us ({us / max_us:.1f}x)")
+    return out
 
 
 def main() -> None:
@@ -37,12 +76,29 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true",
                     help="reduced repeats / scenario grid")
+    ap.add_argument("--backend", default=None, choices=["numpy", "jax"],
+                    help="simulation kernel backend for the whole run "
+                         "(default: REPRO_SIM_BACKEND env var or numpy)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the rows as JSON (CI perf artifact)")
+    ap.add_argument("--check", default=None, metavar="BASELINES",
+                    help="compare rows against the wall-clock budgets in "
+                         "this JSON file; exit non-zero on regression")
     args = ap.parse_args()
     tags = [t for t, _ in BENCHES]
     if args.only and args.only not in tags:
         raise SystemExit(f"unknown benchmark tag {args.only!r}; choose from {tags}")
+
+    from repro.core.jaxsim import resolve_backend, set_default_backend
+    if args.backend:
+        set_default_backend(args.backend)
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = None
+    common.set_context(backend=resolve_backend(None), jax=jax_version)
+
     print("name,us_per_call,derived")
     failed = []
     for tag, module in BENCHES:
@@ -57,7 +113,20 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"quick": args.quick, "failed": failed,
-                       "rows": common.ROWS}, f, indent=1, default=str)
+                       **common.CONTEXT, "rows": common.ROWS},
+                      f, indent=1, default=str)
+    if args.check:
+        with open(args.check) as f:
+            budgets = json.load(f)["budgets"]
+        violations = check_rows(common.ROWS, budgets, only=args.only)
+        if violations:
+            print("perf budget violations:", file=sys.stderr)
+            for v in violations:
+                print(f"  {v}", file=sys.stderr)
+            raise SystemExit(1)
+        checked = [n for n in budgets
+                   if args.only is None or n.split('/', 1)[0] == args.only]
+        print(f"perf budgets OK ({len(checked)} rows checked)")
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

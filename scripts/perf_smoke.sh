@@ -1,25 +1,39 @@
 #!/usr/bin/env bash
 # One-command reproducible perf numbers for the flow-simulation engine.
 #
-#   ./scripts/perf_smoke.sh                    # engine microbench + quick paper suite
-#   ./scripts/perf_smoke.sh --full             # full benchmark grid
-#   ./scripts/perf_smoke.sh --json OUT.json    # quick suite, rows also as JSON (CI artifact)
+#   ./scripts/perf_smoke.sh                         # engine microbench + quick paper suite
+#   ./scripts/perf_smoke.sh --full                  # full benchmark grid
+#   ./scripts/perf_smoke.sh --json OUT.json         # quick suite, rows also as JSON (CI artifact)
+#   ./scripts/perf_smoke.sh --check baselines.json  # quick suite + perf-regression gate
+#   ./scripts/perf_smoke.sh --backend jax           # flip the kernel backend for the run
 #
 # Rows are CSV: name,us_per_call,derived (see benchmarks/common.py); the
-# netsim/* rows feed the perf table in docs/netsim.md.
+# netsim/* rows feed the perf table in docs/netsim.md and the jaxsim/* rows
+# the scaling table in docs/jaxsim.md.  --check wires the committed
+# wall-clock budgets (benchmarks/baselines.json) as a CI gate: any budgeted
+# row that is missing or over budget fails the script.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-if [[ "${1:-}" == "--full" ]]; then
-    exec python -m benchmarks.run
-fi
+full=0
+pass_args=()
+while [[ $# -gt 0 ]]; do
+    case "$1" in
+        --full)
+            full=1; shift ;;
+        --json|--check|--backend)
+            pass_args+=("$1" "$2"); shift 2 ;;
+        *)
+            echo "usage: $0 [--full] [--json OUT.json] [--check BASELINES.json] [--backend numpy|jax]" >&2
+            exit 2 ;;
+    esac
+done
 
-json_args=()
-if [[ "${1:-}" == "--json" ]]; then
-    json_args=(--json "$2")
+if [[ $full == 1 ]]; then
+    exec python -m benchmarks.run ${pass_args[@]+"${pass_args[@]}"}
 fi
 
 python -m benchmarks.run --quick --only netsim
 python -m benchmarks.run --quick --only runtime
-python -m benchmarks.run --quick "${json_args[@]+"${json_args[@]}"}"
+python -m benchmarks.run --quick ${pass_args[@]+"${pass_args[@]}"}

@@ -102,6 +102,17 @@ class AdaptiveBaseline:
         mean = self._mean["hb"][ranks]
         return np.where(self.warm("hb")[ranks], mean, 0.0)
 
+    def cell_stats(self, kind: str, rows: np.ndarray, cols: np.ndarray
+                   ) -> tuple:
+        """(mean, dev, count) gathered at individual matrix cells.
+
+        The sparse access path of the jax detector backend
+        (``jaxsim.detectors``): at fleet scale the window only touches
+        O(pairs) cells, so the backend gathers those instead of shipping
+        the dense matrices to the device."""
+        return (self._mean[kind][rows, cols], self._dev[kind][rows, cols],
+                self._count[kind][rows, cols])
+
     # ------------------------------------------------------------------
     def update(self, kind: str, values: np.ndarray,
                exclude: Optional[np.ndarray] = None) -> None:
@@ -132,6 +143,39 @@ class AdaptiveBaseline:
             dev[rest] = (1.0 - a) * dev[rest] + a * err[rest]
             mean[rest] = mean[rest] + a * delta[rest]
         count[ok] += 1
+
+    def update_cells(self, kind: str, rows: np.ndarray, cols: np.ndarray,
+                     values: np.ndarray) -> None:
+        """Sparse twin of ``update``: fold one window whose observed cells
+        are exactly ``(rows, cols)`` (each cell at most once, ``values``
+        all finite, cells in row-major order).
+
+        Bit-identical to calling ``update(kind, dense)`` with a matrix
+        that is NaN everywhere else: the first-observation seed pool is
+        the same row-major value vector, and the winsorized EWMA step is
+        elementwise.  Used by the jax detector backend, where the dense
+        (n, n) window matrix is never materialised."""
+        if rows.size == 0:
+            return
+        mean, dev, count = self._mean[kind], self._dev[kind], self._count[kind]
+        c = count[rows, cols]
+        first = c == 0
+        if first.any():
+            seed_dev = float(np.mean(np.abs(values - np.median(values))))
+            mean[rows[first], cols[first]] = values[first]
+            dev[rows[first], cols[first]] = seed_dev
+        rest = ~first
+        if rest.any():
+            a = self.alpha
+            rr, cc = rows[rest], cols[rest]
+            m, dv = mean[rr, cc], dev[rr, cc]
+            lim = self.clip_sigma * (MEANAD_TO_SIGMA * dv
+                                     + 1e-12 * np.maximum(np.abs(m), 1e-12)
+                                     + 1e-30)
+            delta = np.clip(values[rest] - m, -lim, lim)
+            dev[rr, cc] = (1.0 - a) * dv + a * np.abs(delta)
+            mean[rr, cc] = m + a * delta
+        count[rows, cols] = c + 1
 
     def update_deficit(self, ranks: np.ndarray, deficits: np.ndarray,
                        exclude: Optional[np.ndarray] = None) -> None:

@@ -333,10 +333,19 @@ class C4DDetector:
     delay statistics, and the paper's steering acts on hangs immediately.
     Consumed per monitoring window by ``c4d.master.C4DMaster`` and, through
     it, by every composition layer (trainer drills, Table-3 downtime,
-    scenario campaigns — see docs/architecture.md)."""
+    scenario campaigns — see docs/architecture.md).
 
-    def __init__(self, cfg: Optional[DetectorConfig] = None):
+    ``backend`` selects the kernel implementation per *call*:
+    ``"numpy"`` (the pinned reference), ``"jax"`` (``core.jaxsim`` —
+    sparse jit kernels, verdict-identical; the 100k-rank path), or
+    ``None`` to follow the process default (``jaxsim.use_backend`` /
+    ``REPRO_SIM_BACKEND``), which is how the scenario engine applies a
+    spec's backend without re-threading every layer."""
+
+    def __init__(self, cfg: Optional[DetectorConfig] = None,
+                 backend: Optional[str] = None):
         self.cfg = _own_cfg(cfg)
+        self.backend = backend
         self.delay = DelayMatrixDetector(self.cfg)
         self.wait = RingWaitDetector(self.cfg)
         self.hang = HangDetector(self.cfg)
@@ -344,6 +353,13 @@ class C4DDetector:
     def analyze(self, window: AnyWindow,
                 n_ranks: Optional[int] = None,
                 baseline: Optional["AdaptiveBaseline"] = None) -> List[Verdict]:
+        from repro.core.jaxsim import resolve_backend
+        if resolve_backend(self.backend) == "jax":
+            from repro.core.jaxsim.detectors import analyze_arrays
+            arrays = (window if isinstance(window, TelemetryArrays)
+                      else TelemetryArrays.from_window(window))
+            return analyze_arrays(arrays, self.cfg, n_ranks=n_ranks,
+                                  baseline=baseline)
         verdicts = self.hang.analyze(window, baseline=baseline)
         if verdicts:
             # hangs pre-empt slow analysis (job is stopped); the delay/wait

@@ -135,8 +135,14 @@ class C4DMaster:
     operating_point: Optional[OperatingPoint] = None
     baseline: Optional[AdaptiveBaseline] = None
     _tracks: Dict[int, _NodeTrack] = field(default_factory=dict)
+    #: detector backend ("numpy"/"jax"/None = module default). Applied to
+    #: the default-constructed detector only — an explicitly supplied
+    #: detector keeps whatever backend it was built with.
+    backend: Optional[str] = None
 
     def __post_init__(self):
+        if self.backend is not None and self.detector.backend is None:
+            self.detector.backend = self.backend
         self.agents = [
             C4Agent(nid, range(nid * self.ranks_per_node,
                                (nid + 1) * self.ranks_per_node))
@@ -151,13 +157,15 @@ class C4DMaster:
     @classmethod
     def from_operating_point(cls, op: OperatingPoint, n_ranks: int,
                              ranks_per_node: int = 8,
-                             window_period_s: float = 30.0) -> "C4DMaster":
+                             window_period_s: float = 30.0,
+                             backend: Optional[str] = None) -> "C4DMaster":
         """A streaming master tuned to one ROC-sweep operating point."""
         return cls(n_ranks=n_ranks, ranks_per_node=ranks_per_node,
-                   detector=C4DDetector(op.detector_config()),
+                   detector=C4DDetector(op.detector_config(),
+                                        backend=backend),
                    window_period_s=window_period_s,
                    confirm_windows=op.confirm_streak,
-                   operating_point=op)
+                   operating_point=op, backend=backend)
 
     def node_of(self, rank: int) -> int:
         return rank // self.ranks_per_node

@@ -225,7 +225,8 @@ AnyWindow = Union[TelemetryWindow, TelemetryArrays]
 
 
 def grouped_median(keys: np.ndarray, values: np.ndarray,
-                   return_groups: bool = False) -> Tuple[np.ndarray, ...]:
+                   return_groups: bool = False,
+                   backend: Optional[str] = None) -> Tuple[np.ndarray, ...]:
     """Median of ``values`` per distinct key, vectorized.
 
     Sorts once by (key, value) and reads each group's middle element(s);
@@ -237,7 +238,25 @@ def grouped_median(keys: np.ndarray, values: np.ndarray,
     mapping each input element to its group), so callers that need
     per-group sums or element->group lookups reuse this sort instead of
     re-sorting (``agent.prefilter_arrays`` on the campaign hot path).
+
+    ``backend="jax"`` (or a process default of jax, see ``core.jaxsim``)
+    runs the sort/fold as a jit kernel under x64 — same keys, bit-equal
+    medians.  The group-structure variant stays NumPy: its consumers are
+    host-side prefilters.
     """
+    from repro.core.jaxsim import resolve_backend
+    if not return_groups and resolve_backend(backend) == "jax":
+        from repro.core.jaxsim.kernels import (PAD_KEY, enable_x64,
+                                               grouped_median_kernel, pad_len)
+        tp = pad_len(keys.size)
+        pk = np.full(tp, PAD_KEY, np.int64)
+        pv = np.full(tp, np.inf)
+        pk[:keys.size] = keys
+        pv[:values.size] = values
+        with enable_x64():
+            gkey, med, _, valid = grouped_median_kernel(pk, pv)
+        ok = np.asarray(valid)
+        return np.asarray(gkey)[ok], np.asarray(med)[ok]
     order = np.lexsort((values, keys))
     k = keys[order]
     v = values[order]
@@ -253,22 +272,25 @@ def grouped_median(keys: np.ndarray, values: np.ndarray,
     return k[starts], med, counts, inverse
 
 
-def _pair_matrix(arr: TelemetryArrays, values: np.ndarray, n: int) -> np.ndarray:
+def _pair_matrix(arr: TelemetryArrays, values: np.ndarray, n: int,
+                 backend: Optional[str] = None) -> np.ndarray:
     keys = arr.tr_src * n + arr.tr_dst
-    uk, med = grouped_median(keys, values)
+    uk, med = grouped_median(keys, values, backend=backend)
     m = np.full((n, n), np.nan)
     m[uk // n, uk % n] = med
     return m
 
 
 def delay_matrix(window: AnyWindow, n_ranks: Optional[int] = None,
-                 use_bandwidth: bool = False) -> np.ndarray:
+                 use_bandwidth: bool = False,
+                 backend: Optional[str] = None) -> np.ndarray:
     """Fold transport records into the paper's Fig. 6 matrix.
 
     D[src, dst] = median transfer latency (normalised per byte) between the
     pair; NaN where no traffic was observed.  ``TelemetryArrays`` input
-    takes the vectorized grouped-median path; ``TelemetryWindow`` input is
-    the scalar reference the vectorized fold is pinned against."""
+    takes the vectorized grouped-median path (``backend`` selects the
+    NumPy or jax fold — bit-equal, see ``core.jaxsim``); ``TelemetryWindow``
+    input is the scalar reference the vectorized fold is pinned against."""
     n = n_ranks or window.n_ranks()
     if isinstance(window, TelemetryArrays):
         if window.tr_src.size == 0:
@@ -276,7 +298,7 @@ def delay_matrix(window: AnyWindow, n_ranks: Optional[int] = None,
         transfer = window.tr_transfer()
         v = (window.tr_bytes / transfer if use_bandwidth
              else transfer / np.maximum(window.tr_bytes, 1))
-        return _pair_matrix(window, v, n)
+        return _pair_matrix(window, v, n, backend=backend)
     acc: Dict[Tuple[int, int], List[float]] = {}
     for t in window.transports:
         v = (t.msg_bytes / t.transfer) if use_bandwidth else t.per_byte_latency
@@ -287,13 +309,14 @@ def delay_matrix(window: AnyWindow, n_ranks: Optional[int] = None,
     return d
 
 
-def wait_matrix(window: AnyWindow, n_ranks: Optional[int] = None) -> np.ndarray:
+def wait_matrix(window: AnyWindow, n_ranks: Optional[int] = None,
+                backend: Optional[str] = None) -> np.ndarray:
     """W[src, dst] = median receiver wait on the (src -> dst) edge."""
     n = n_ranks or window.n_ranks()
     if isinstance(window, TelemetryArrays):
         if window.tr_src.size == 0:
             return np.full((n, n), np.nan)
-        return _pair_matrix(window, window.tr_wait(), n)
+        return _pair_matrix(window, window.tr_wait(), n, backend=backend)
     acc: Dict[Tuple[int, int], List[float]] = {}
     for t in window.transports:
         acc.setdefault((t.src_rank, t.dst_rank), []).append(t.wait)

@@ -1,0 +1,100 @@
+"""JAX-accelerated simulation kernels + the simulator backend switch.
+
+The detection and flow-simulation hot paths (grouped pair medians, the
+delay/wait/hang detectors, FlowSet max-min water-filling) exist twice:
+
+  * the NumPy implementations in ``core/c4d`` and ``core/flowset`` — the
+    pinned references every golden test is written against;
+  * ``jit``/``vmap`` ports in this package (``kernels``, ``detectors``,
+    ``waterfill``) that run the same math as one device computation with
+    padded static shapes, unlocking 100k-rank windows and batched-over-
+    trials campaign scoring (docs/jaxsim.md).
+
+This module is the *switch*: it resolves which backend a call should use
+without importing jax.  That matters because several CI jobs (and any
+numpy-only install) run the scenario/campaign stack without jax present —
+the kernels are imported lazily, on the first call that actually resolves
+to ``"jax"``.
+
+Resolution order for ``resolve_backend(None)``:
+
+  1. an explicit ``use_backend(...)`` / ``set_default_backend(...)`` scope
+     (the scenario engine wraps each run in the spec's backend),
+  2. the ``REPRO_SIM_BACKEND`` environment variable,
+  3. ``"numpy"`` — so every pinned golden keeps running bit-identically
+     unless a caller opts in.
+"""
+from __future__ import annotations
+
+import contextlib
+import importlib.util
+import os
+from typing import Iterator, Optional, Tuple
+
+#: the selectable simulator backends (docs/jaxsim.md).
+BACKENDS: Tuple[str, ...] = ("numpy", "jax")
+
+#: environment override consulted when no explicit scope is active.
+BACKEND_ENV = "REPRO_SIM_BACKEND"
+
+_default_backend: Optional[str] = None       # set_default_backend / use_backend
+
+
+class BackendError(ValueError):
+    """Unknown or unavailable simulator backend."""
+
+
+def jax_available() -> bool:
+    """True when jax is importable (without importing it)."""
+    return importlib.util.find_spec("jax") is not None
+
+
+def _validate(name: str) -> str:
+    name = name.strip().lower()
+    if name not in BACKENDS:
+        raise BackendError(
+            f"unknown simulator backend {name!r}; choose from {BACKENDS}")
+    if name == "jax" and not jax_available():
+        raise BackendError(
+            "backend 'jax' requested but jax is not installed; install the "
+            "pinned range from requirements.txt or use backend='numpy'")
+    return name
+
+
+def get_default_backend() -> str:
+    """The backend used when a call site passes ``backend=None``."""
+    if _default_backend is not None:
+        return _default_backend
+    env = os.environ.get(BACKEND_ENV)
+    if env:
+        return _validate(env)
+    return "numpy"
+
+
+def set_default_backend(name: Optional[str]) -> None:
+    """Set (or with ``None`` clear) the process-wide default backend."""
+    global _default_backend
+    _default_backend = _validate(name) if name is not None else None
+
+
+@contextlib.contextmanager
+def use_backend(name: Optional[str]) -> Iterator[str]:
+    """Scoped default backend — how ``run_scenario`` applies
+    ``ScenarioSpec.backend`` to everything beneath it (FlowSet calls deep
+    inside C4P included) without threading an argument through every
+    layer.  ``None`` leaves the current default untouched."""
+    global _default_backend
+    if name is None:
+        yield get_default_backend()
+        return
+    prev = _default_backend
+    _default_backend = _validate(name)
+    try:
+        yield _default_backend
+    finally:
+        _default_backend = prev
+
+
+def resolve_backend(name: Optional[str] = None) -> str:
+    """Fold an optional per-call ``backend=`` argument against the default."""
+    return get_default_backend() if name is None else _validate(name)

@@ -1,0 +1,289 @@
+"""Host adapters: TelemetryArrays windows -> jit kernels -> Verdict lists.
+
+``analyze_arrays`` is the jax-backend twin of ``C4DDetector.analyze`` —
+same composite semantics (hang analysis pre-empts slow analysis; the
+adaptive baseline advances only on hang-free windows), same Verdict
+objects field-for-field (tests/test_jaxsim.py pins equality on the Table-3
+golden windows, score floats and detail strings included).
+
+The division of labour:
+
+  * device (``kernels``): grouped pair medians (the sort-heavy part), the
+    z folds and per-rank segment reductions, heartbeat-deficit scoring —
+    everything that is O(transports) or O(n) and contraction-safe;
+  * host (this module): padding to the static-shape buckets, the per-group
+    z centers/scales (``_mixed_center_scale`` — MAD math stays in NumPy so
+    XLA's FMA contraction cannot shift the last ulp; see kernels.py),
+    building the small Verdict list from the fold masks, and folding the
+    window back into the NumPy ``AdaptiveBaseline`` (``update_cells`` —
+    the same winsorized math, so a jax-backend streaming master stays
+    bit-compatible with the NumPy one window for window).
+
+``score_windows_batched`` is the vmap entry the campaign/bench layer uses
+to score many same-shape windows as one device computation.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.c4d.baseline import MEANAD_TO_SIGMA, AdaptiveBaseline
+from repro.core.c4d.detector import (COMM_HANG, COMM_SLOW_DST, COMM_SLOW_LINK,
+                                     COMM_SLOW_SRC, DetectorConfig,
+                                     NONCOMM_HANG, NONCOMM_SLOW, Verdict)
+from repro.core.c4d.telemetry import TelemetryArrays
+from repro.core.jaxsim.kernels import (PAD_KEY, batched_pair_median_kernel,
+                                       batched_slow_fold_kernel, enable_x64,
+                                       hang_kernel, pad_len,
+                                       pair_median_kernel, slow_fold_kernel)
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# padding helpers (host side; everything lands in power-of-two buckets)
+# ---------------------------------------------------------------------------
+
+def pack_pairs(window: TelemetryArrays, n: int):
+    """(keys, delay values, wait values) padded to the bucket size.
+
+    Keys are ``src * n + dst`` (the row-major cell id); padding slots carry
+    ``PAD_KEY``/+inf so they sort last and group into invalid slots."""
+    t = int(window.tr_src.size)
+    tp = pad_len(t)
+    keys = np.full(tp, PAD_KEY, np.int64)
+    dv = np.full(tp, np.inf)
+    wv = np.full(tp, np.inf)
+    if t:
+        keys[:t] = window.tr_src * n + window.tr_dst
+        transfer = window.tr_transfer()
+        dv[:t] = transfer / np.maximum(window.tr_bytes, 1)
+        wv[:t] = window.tr_wait()
+    return keys, dv, wv, t
+
+
+def _pad_index(values: np.ndarray, size: int) -> np.ndarray:
+    out = np.zeros(size, np.int64)
+    out[:values.size] = values
+    return out
+
+
+def _mixed_center_scale(values: np.ndarray, valid: np.ndarray,
+                        gkey: np.ndarray, n: int,
+                        baseline: Optional[AdaptiveBaseline], kind: str):
+    """Per-group z normalisers for ``z = (median - center) / scale``.
+
+    Cross-sectional center/scale come from the window's own group medians
+    (``detector._robust_z``'s formula verbatim); where an attached baseline
+    is warm, the cell's EWMA mean and MEANAD-scaled dev take over
+    (``AdaptiveBaseline.z``).  All of it is NumPy on purpose — these are
+    the only multiply-add chains on the exact path, and XLA would contract
+    them into FMAs (kernels.py module docstring)."""
+    size = values.size
+    center = np.zeros(size)
+    scale = np.ones(size)
+    vals = values[valid]
+    if vals.size == 0:
+        return center, scale
+    med = np.median(vals)
+    mad = np.median(np.abs(vals - med))
+    cs = 1.4826 * mad + 1e-12 * max(abs(med), 1e-12) + 1e-30
+    c = np.full(vals.size, med)
+    s = np.full(vals.size, cs)
+    if baseline is not None:
+        rows = gkey[valid] // n
+        cols = gkey[valid] % n
+        bm, bd, bc = baseline.cell_stats(kind, rows, cols)
+        bscale = (MEANAD_TO_SIGMA * bd
+                  + 1e-12 * np.maximum(np.abs(bm), 1e-12) + 1e-30)
+        use = bc >= baseline.warm_windows
+        c = np.where(use, bm, c)
+        s = np.where(use, bscale, s)
+    center[valid] = c
+    scale[valid] = s
+    return center, scale
+
+
+# ---------------------------------------------------------------------------
+# the composite analysis (drop-in for C4DDetector.analyze on arrays windows)
+# ---------------------------------------------------------------------------
+
+def analyze_arrays(window: TelemetryArrays, cfg: DetectorConfig,
+                   n_ranks: Optional[int] = None,
+                   baseline: Optional[AdaptiveBaseline] = None
+                   ) -> List[Verdict]:
+    n = n_ranks or window.n_ranks()
+    n_pad = pad_len(n)
+    with enable_x64():
+        verdicts = _hang_verdicts(window, cfg, n, n_pad, baseline)
+        if verdicts:
+            # hangs pre-empt slow analysis and freeze the baseline —
+            # identical to the NumPy composite
+            return verdicts
+        verdicts, gkey, valid, dmed, wmed = _slow_verdicts(
+            window, cfg, n, n_pad, baseline)
+    if baseline is not None:
+        _advance_baseline(window, cfg, n, baseline, gkey, valid, dmed, wmed)
+    return verdicts
+
+
+def _hang_verdicts(window, cfg, n, n_pad, baseline):
+    h = int(window.hb_rank.size)
+    hp = pad_len(h)
+    hb_valid = np.zeros(hp, bool)
+    hb_valid[:h] = True
+    t = int(window.tr_src.size)
+    sp = pad_len(t)
+    src_valid = np.zeros(sp, bool)
+    src_valid[:t] = True
+    offsets = np.zeros(n_pad)
+    if baseline is not None and n:
+        offsets[:n] = baseline.deficit_offset(np.arange(n))
+    res = hang_kernel(
+        _pad_index(window.hb_rank, hp), _pad_index(window.hb_seq, hp),
+        hb_valid, _pad_index(window.tr_src, sp), src_valid,
+        jnp.asarray(offsets), cfg.hang_grace, n_pad=n_pad)
+    hung = np.asarray(res["hung"])
+    if not hung.any():
+        return []
+    seqs = np.asarray(res["seqs"])
+    med = float(res["med"])
+    is_src = np.asarray(res["is_src"])
+    out = []
+    for r in np.flatnonzero(hung):
+        s = int(seqs[r])
+        syndrome = COMM_HANG if is_src[r] else NONCOMM_HANG
+        out.append(Verdict(syndrome, rank=int(r), score=float(med - s),
+                           detail=f"seq {s} vs median {med:.0f}"))
+    return out
+
+
+def _compact_groups(k, dmed, wmed, rep):
+    """Compact the element-aligned kernel output to one slot per real group
+    (ascending key order, padded to the group bucket).  Keeps the fold
+    kernel's input ~|iters| times smaller than the transport count."""
+    idx = np.flatnonzero(rep)
+    g = idx.size
+    gp = pad_len(g)
+    gkey = np.full(gp, PAD_KEY, np.int64)
+    dm = np.zeros(gp)
+    wm = np.zeros(gp)
+    valid = np.zeros(gp, bool)
+    gkey[:g] = k[idx]
+    dm[:g] = dmed[idx]
+    wm[:g] = wmed[idx]
+    valid[:g] = True
+    return gkey, dm, wm, valid
+
+
+def _slow_verdicts(window, cfg, n, n_pad, baseline):
+    keys, dv, wv, t = pack_pairs(window, n)
+    k_e, dmed_e, wmed_e, _, rep_e, _ = pair_median_kernel(keys, dv, wv)
+    gkey, dmed, wmed, valid = _compact_groups(
+        np.asarray(k_e), np.asarray(dmed_e), np.asarray(wmed_e),
+        np.asarray(rep_e))
+    cd, sd = _mixed_center_scale(dmed, valid, gkey, n, baseline, "delay")
+    cw, sw = _mixed_center_scale(wmed, valid, gkey, n, baseline, "wait")
+    res = slow_fold_kernel(gkey, valid, dmed, wmed, cd, sd, cw, sw,
+                           cfg.mad_threshold, cfg.row_col_fraction,
+                           cfg.min_observations, n=n, n_pad=n_pad)
+    verdicts: List[Verdict] = []
+    row_sel = np.asarray(res["row_sel"])[:n]
+    row_score = np.asarray(res["row_score"])
+    row_hot = np.asarray(res["row_hot"])
+    row_obs = np.asarray(res["row_obs"])
+    for i in np.flatnonzero(row_sel):
+        verdicts.append(Verdict(
+            COMM_SLOW_SRC, rank=int(i), score=float(row_score[i]),
+            detail=f"row {i}: {int(row_hot[i])}/{int(row_obs[i])} hot"))
+    col_sel = np.asarray(res["col_sel"])[:n]
+    col_score = np.asarray(res["col_score"])
+    col_hot = np.asarray(res["col_hot"])
+    col_obs = np.asarray(res["col_obs"])
+    for j in np.flatnonzero(col_sel):
+        verdicts.append(Verdict(
+            COMM_SLOW_DST, rank=int(j), score=float(col_score[j]),
+            detail=f"col {j}: {int(col_hot[j])}/{int(col_obs[j])} hot"))
+    point = np.asarray(res["point"])
+    zd = np.asarray(res["zd"])
+    for g in np.flatnonzero(point):
+        i, j = divmod(int(gkey[g]), n)
+        verdicts.append(Verdict(COMM_SLOW_LINK, link=(i, j),
+                                score=float(zd[g]),
+                                detail=f"point ({i},{j})"))
+    wait_sel = np.asarray(res["wait_sel"])[:n]
+    wait_score = np.asarray(res["wait_score"])
+    for i in np.flatnonzero(wait_sel):
+        verdicts.append(Verdict(NONCOMM_SLOW, rank=int(i),
+                                score=float(wait_score[i]),
+                                detail="receiver wait w/ healthy transfer"))
+    return verdicts, gkey, valid, dmed, wmed
+
+
+def _advance_baseline(window, cfg, n, baseline, gkey, valid, dmed, wmed):
+    """Fold the hang-free window into the EWMA history — the sparse twin of
+    ``C4DDetector._advance_baseline`` (same cells, same order, same
+    winsorized math via ``AdaptiveBaseline.update_cells``)."""
+    if valid.any():
+        rows = gkey[valid] // n
+        cols = gkey[valid] % n
+        baseline.update_cells("delay", rows, cols, dmed[valid])
+        baseline.update_cells("wait", rows, cols, wmed[valid])
+    if window.hb_rank.size:
+        ranks, inv = np.unique(window.hb_rank, return_inverse=True)
+        seqs = np.full(ranks.size, np.iinfo(np.int64).min)
+        np.maximum.at(seqs, inv, window.hb_seq)
+        deficit = np.median(seqs) - seqs
+        adj = deficit - baseline.deficit_offset(ranks)
+        baseline.update_deficit(ranks, deficit.astype(float),
+                                exclude=adj >= cfg.hang_grace)
+
+
+# ---------------------------------------------------------------------------
+# batched scoring (vmap over campaign trials / windows)
+# ---------------------------------------------------------------------------
+
+def score_windows_batched(keys: np.ndarray, dvals: np.ndarray,
+                          wvals: np.ndarray, cfg: DetectorConfig, n: int):
+    """Score B same-bucket windows as one device computation.
+
+    ``keys``/``dvals``/``wvals`` are (B, T_pad) arrays packed with
+    ``pack_pairs``.  Returns the per-window fold masks/scores (row/col/
+    point/wait) as stacked NumPy arrays — the campaign layer reduces these
+    to per-trial verdict counts without a per-window dispatch."""
+    n_pad = pad_len(n)
+    b = keys.shape[0]
+    with enable_x64():
+        med_fn = batched_pair_median_kernel()
+        k_e, dmed_e, wmed_e, _, rep_e, _ = (np.asarray(x) for x in
+                                            med_fn(keys, dvals, wvals))
+        # compact every window to the shared group bucket so the fold
+        # vmaps over one static shape
+        reps = [np.flatnonzero(rep_e[i]) for i in range(b)]
+        gp = pad_len(max((r.size for r in reps), default=1))
+        gkey = np.full((b, gp), PAD_KEY, np.int64)
+        dmed = np.zeros((b, gp))
+        wmed = np.zeros((b, gp))
+        valid = np.zeros((b, gp), bool)
+        for i, idx in enumerate(reps):
+            g = idx.size
+            gkey[i, :g] = k_e[i, idx]
+            dmed[i, :g] = dmed_e[i, idx]
+            wmed[i, :g] = wmed_e[i, idx]
+            valid[i, :g] = True
+        cd, sd = np.zeros((b, gp)), np.ones((b, gp))
+        cw, sw = np.zeros((b, gp)), np.ones((b, gp))
+        for i in range(b):
+            cd[i], sd[i] = _mixed_center_scale(dmed[i], valid[i], gkey[i],
+                                               n, None, "delay")
+            cw[i], sw[i] = _mixed_center_scale(wmed[i], valid[i], gkey[i],
+                                               n, None, "wait")
+        fold_fn = batched_slow_fold_kernel(n, n_pad)
+        res = fold_fn(gkey, valid, dmed, wmed, cd, sd, cw, sw,
+                      cfg.mad_threshold, cfg.row_col_fraction,
+                      cfg.min_observations)
+        out = {k: np.asarray(v) for k, v in res.items()}
+        out["gkey"] = gkey
+        out["valid"] = valid
+        return out

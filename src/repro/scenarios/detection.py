@@ -63,9 +63,12 @@ class DetectionHarness:
     max_windows: int = 4
     window_period_s: Optional[float] = None   # default: master's 30 s
     vectorized: bool = True
+    backend: Optional[str] = None             # detector kernels; None = default
 
     def _master(self) -> C4DMaster:
-        m = C4DMaster(n_ranks=self.telemetry.n, ranks_per_node=self.ranks_per_node)
+        m = C4DMaster(n_ranks=self.telemetry.n,
+                      ranks_per_node=self.ranks_per_node,
+                      backend=self.backend)
         if self.window_period_s is not None:
             m.window_period_s = self.window_period_s
         return m

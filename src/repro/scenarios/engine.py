@@ -19,6 +19,7 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from repro.core.jaxsim import use_backend
 from repro.runtime import EventBus, Service
 from repro.scenarios.services import (C4DService, DowntimeService,
                                       FabricService, JobAdmitted, RunContext)
@@ -100,7 +101,16 @@ class CampaignEngine:
 def run_scenario(spec: ScenarioSpec) -> dict:
     """Run one spec; with ``compare_fabrics`` the same drill runs on both
     fabrics (identical seed/events) and the primary report carries a
-    ``variants`` section plus the A/B goodput comparison."""
+    ``variants`` section plus the A/B goodput comparison.
+
+    ``spec.backend`` scopes the kernel backend for the whole run (both A/B
+    arms), so every component that resolves the default — the flow engine's
+    water-filling, grouped medians, the detector — flips together."""
+    with use_backend(spec.backend):
+        return _run_scenario(spec)
+
+
+def _run_scenario(spec: ScenarioSpec) -> dict:
     if spec.compare_fabrics:
         variants = {mode: CampaignEngine(spec, fabric_mode=mode).run()
                     for mode in ("c4p", "ecmp")}

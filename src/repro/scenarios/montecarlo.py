@@ -88,6 +88,9 @@ class CampaignSpec:
     # The cost-optimal point comes from the ROC sweep
     # (``scenarios.precision``; CLI ``--sweep`` / ``--operating-point``).
     operating_point: Optional[OperatingPoint] = None
+    # simulation kernel backend per trial ("numpy" | "jax"); None inherits
+    # the module default so existing campaign goldens stay bit-identical
+    backend: Optional[str] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -158,6 +161,7 @@ def sample_trial(spec: CampaignSpec, trial: int) -> ScenarioSpec:
         apply_localization_ceiling=spec.apply_localization_ceiling,
         streaming_tick_s=spec.streaming_tick_s,
         operating_point=spec.operating_point,
+        backend=spec.backend,
         jobs=(JobSpec(0, tuple(range(spec.n_hosts))),),
         events=tuple(events),
     )
@@ -211,7 +215,8 @@ def names() -> List[str]:
 
 def get(name: str, seed: Optional[int] = None, n_trials: Optional[int] = None,
         gpus: Optional[int] = None,
-        operating_point: Optional[OperatingPoint] = None) -> CampaignSpec:
+        operating_point: Optional[OperatingPoint] = None,
+        backend: Optional[str] = None) -> CampaignSpec:
     """Look up a shipped campaign, with CLI-style overrides applied."""
     try:
         spec = _REGISTRY[name]()
@@ -219,7 +224,7 @@ def get(name: str, seed: Optional[int] = None, n_trials: Optional[int] = None,
         raise KeyError(f"unknown campaign {name!r}; choose from {names()}")
     over = {k: v for k, v in
             (("seed", seed), ("n_trials", n_trials), ("gpus", gpus),
-             ("operating_point", operating_point))
+             ("operating_point", operating_point), ("backend", backend))
             if v is not None}
     return dataclasses.replace(spec, **over) if over else spec
 

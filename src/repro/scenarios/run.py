@@ -151,6 +151,10 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=None,
                     help="seed threaded through spec factories and campaign "
                          "samplers (default: each target's own default)")
+    ap.add_argument("--backend", default=None, choices=["numpy", "jax"],
+                    help="simulation kernel backend for scenarios and "
+                         "campaigns (default: REPRO_SIM_BACKEND env var "
+                         "or numpy; see docs/jaxsim.md)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write report(s) as JSON: a *.json file, a "
                          "directory (one file per target), or '-' for "
@@ -194,9 +198,14 @@ def main(argv=None) -> int:
     failed: List[str] = []
     for name in targets:
         spec = library.get(name, seed=args.seed if args.seed is not None else 0)
-        if op is not None:
+        if op is not None or args.backend is not None:
             import dataclasses
-            spec = dataclasses.replace(spec, operating_point=op)
+            over = {}
+            if op is not None:
+                over["operating_point"] = op
+            if args.backend is not None:
+                over["backend"] = args.backend
+            spec = dataclasses.replace(spec, **over)
         rep = run_scenario(spec)
         if args.live:
             import tempfile
@@ -218,7 +227,8 @@ def main(argv=None) -> int:
 
     for name in args.campaign:
         cam = montecarlo.get(name, seed=args.seed, n_trials=args.trials,
-                             gpus=args.gpus, operating_point=op)
+                             gpus=args.gpus, operating_point=op,
+                             backend=args.backend)
         t0 = time.perf_counter()
         report = montecarlo.run_campaign(cam, workers=max(args.workers, 1))
         wall = time.perf_counter() - t0

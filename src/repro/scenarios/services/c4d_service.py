@@ -86,11 +86,13 @@ class C4DService(Service):
             if self.operating_point is not None:
                 self.stream_master = C4DMaster.from_operating_point(
                     self.operating_point, n_ranks=spec.telemetry_ranks,
-                    ranks_per_node=spec.ranks_per_node)
+                    ranks_per_node=spec.ranks_per_node,
+                    backend=spec.backend)
             else:
                 self.stream_master = C4DMaster(
                     n_ranks=spec.telemetry_ranks,
-                    ranks_per_node=spec.ranks_per_node)
+                    ranks_per_node=spec.ranks_per_node,
+                    backend=spec.backend)
         self.active: List[ActiveFault] = []
         self.closed: List[ActiveFault] = []
         self.pending_transients: List[Fault] = []

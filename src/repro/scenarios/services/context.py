@@ -69,7 +69,8 @@ class RunContext:
         self.telemetry = RingJobTelemetry(n_ranks=spec.telemetry_ranks,
                                           seed=spec.seed + 1)
         self.harness = DetectionHarness(self.telemetry,
-                                        ranks_per_node=spec.ranks_per_node)
+                                        ranks_per_node=spec.ranks_per_node,
+                                        backend=spec.backend)
         self.jobs: Dict[int, JobRun] = {}
         self.finished: List[JobRun] = []
         self.last_result = None             # latest steady-state RateResult

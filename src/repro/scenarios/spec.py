@@ -138,6 +138,10 @@ class ScenarioSpec:
     # precision pipeline for the streaming master (adaptive baselines +
     # suspect/confirm state machine); None keeps the pinned PR 5 behaviour
     operating_point: Optional[OperatingPoint] = None
+    # simulation kernel backend ("numpy" | "jax"); None inherits the
+    # module default (REPRO_SIM_BACKEND env var or "numpy"), so existing
+    # specs and goldens are untouched
+    backend: Optional[str] = None
 
     jobs: Tuple[JobSpec, ...] = ()
     events: Tuple[Event, ...] = ()

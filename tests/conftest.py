@@ -2,5 +2,9 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root too, so tests can import the benchmark harness (the perf-gate
+# checker lives in benchmarks/run.py) and sibling test fixtures via the
+# ``tests.`` namespace regardless of how pytest was invoked
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 # NOTE: no XLA_FLAGS here by design — smoke tests and benches must see the
 # real single CPU device; only the dry-run forces 512 host devices.

@@ -14,12 +14,18 @@ Two row families:
     cost of the always-on streaming master: the pinned PR 5 path vs the
     precision operating point (adaptive EWMA baselines + graded
     confirmation); ``derived.overhead`` is what the extra math costs.
+  * ``detection/divergence_scan_<n>`` — one cross-sectional divergence
+    scan (robust z over per-rank loss / grad / overflow train signals).
+  * ``detection/attribution_<n>`` — one Mycroft-style dependency cover
+    (hot-cell extraction + greedy set cover) over a slow-source window.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import emit, timeit
+from repro.core.c4d.attribution import AttributionConfig, attribute_window
+from repro.core.c4d.divergence import DivergenceDetector
 from repro.core.c4d.master import C4DMaster, OperatingPoint
 from repro.core.faults import TABLE1, Fault, RingJobTelemetry, fault_for_class
 from repro.scenarios.detection import DetectionHarness
@@ -111,4 +117,34 @@ def run(quick: bool = False) -> None:
             "us_per_window": f"{us_prec / n_windows:.0f}",
             "operating_point": PRECISION_OP.label().replace(",", ";"),
             "overhead": f"{us_prec / max(us_ref, 1e-9):.2f}x",
+        })
+
+    # PR 8 detectors: divergence scan + root-cause attribution.  Both rows
+    # are budgeted in baselines.json, so they must be emitted in --quick
+    # runs too (a missing budgeted row fails the gate).
+    for n in (64, 1024):
+        tel = RingJobTelemetry(n_ranks=n, seed=0)
+        det = DivergenceDetector()
+        train = tel.train_signals(
+            window_id=0, faults=[Fault("sdc", rank=n // 3, severity=5.0)])
+        us_div = timeit(lambda: det.analyze(train), repeats=3)
+        emit(f"detection/divergence_scan_{n}", us_div, {
+            "ranks": n,
+            "verdicts": len(det.analyze(train)),
+        })
+
+        master = C4DMaster(n_ranks=n, ranks_per_node=8)
+        win = tel.window_arrays(
+            window_id=0, faults=[Fault("slow_src", rank=n // 3,
+                                       severity=9.0)])
+        master.ingest(win)
+        verdicts = master.offline_log[-1][1]
+        cfg = AttributionConfig()
+        us_att = timeit(lambda: attribute_window(
+            verdicts, window=win, n_ranks=n, cfg=cfg), repeats=3)
+        att = attribute_window(verdicts, window=win, n_ranks=n, cfg=cfg)
+        emit(f"detection/attribution_{n}", us_att, {
+            "ranks": n,
+            "culprits": len(att.culprits),
+            "hot_cells": att.hot_cells,
         })

@@ -90,7 +90,8 @@ def reports_to_window(reports: Sequence[AgentReport],
     """Master-side reassembly: summaries become representative transport
     records (median latency per edge), suspects are kept raw."""
     win = TelemetryWindow(window_id=template.window_id, comms=template.comms,
-                          t_begin=template.t_begin, t_end=template.t_end)
+                          t_begin=template.t_begin, t_end=template.t_end,
+                          train=template.train)
     for rep in reports:
         win.heartbeats.extend(rep.heartbeats)
         for s in rep.summaries:
@@ -159,4 +160,7 @@ def prefilter_arrays(window: TelemetryArrays, ranks_per_node: int,
         tr_src=m_src, tr_dst=m_dst, tr_bytes=m_bytes,
         tr_post=m_post, tr_start=m_start, tr_end=m_end,
         hb_rank=window.hb_rank, hb_seq=window.hb_seq, hb_t=window.hb_t,
-        t_begin=window.t_begin, t_end=window.t_end)
+        t_begin=window.t_begin, t_end=window.t_end,
+        # train signals ride past the prefilter untouched: they are already
+        # one summary row per rank, there is nothing to batch
+        train=window.train)

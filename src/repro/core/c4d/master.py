@@ -18,9 +18,13 @@ from dataclasses import dataclass, field, fields
 from typing import Dict, List, Optional
 
 from repro.core.c4d.agent import C4Agent, prefilter_arrays, reports_to_window
+from repro.core.c4d.attribution import (Attribution, AttributionConfig,
+                                        Culprit, attribute_window)
 from repro.core.c4d.baseline import AdaptiveBaseline
 from repro.core.c4d.detector import (C4DDetector, DetectorConfig, Verdict,
                                      COMM_HANG, NONCOMM_HANG)
+from repro.core.c4d.divergence import (DIVERGENCE_OVERFLOW,
+                                       DivergenceDetector)
 from repro.core.c4d.telemetry import AnyWindow, TelemetryArrays
 
 #: graded actions of the precision state machine (docs/runtime.md).
@@ -28,12 +32,20 @@ ACTION_ISOLATE = "isolate_restart"
 ACTION_DEPRIORITIZE = "deprioritize"    # suspect: steer traffic away, keep up
 ACTION_REPRIORITIZE = "reprioritize"    # suspect recovered: restore planning
 
+#: syndromes that act without waiting for confirmation streaks: hangs stop
+#: the job outright, and an overflowing rank's corrupt values allreduce
+#: into every replica the moment the next sync completes.
+_IMMEDIATE = (COMM_HANG, NONCOMM_HANG, DIVERGENCE_OVERFLOW)
+
 
 @dataclass
 class NodeAction:
     node_id: int
     verdicts: List[Verdict]
     action: str = ACTION_ISOLATE
+    #: attribution culprits targeting this node (empty unless the master
+    #: runs with an AttributionConfig)
+    culprits: tuple = ()
 
 
 @dataclass(frozen=True)
@@ -139,6 +151,14 @@ class C4DMaster:
     #: the default-constructed detector only — an explicitly supplied
     #: detector keeps whatever backend it was built with.
     backend: Optional[str] = None
+    #: root-cause attribution (opt-in): a config turns on the Mycroft-style
+    #: dependency cover; None keeps the pinned verdict->node fold.
+    attribution: Optional[AttributionConfig] = None
+    #: divergence channel (opt-in): a detector makes the master analyse the
+    #: window's TrainSignals next to the comm verdicts; None ignores them.
+    divergence: Optional[DivergenceDetector] = None
+    last_attribution: Optional[Attribution] = None
+    attribution_log: List = field(default_factory=list)
 
     def __post_init__(self):
         if self.backend is not None and self.detector.backend is None:
@@ -186,7 +206,25 @@ class C4DMaster:
             merged = reports_to_window(reports, window)
         verdicts = self.detector.analyze(merged, n_ranks=self.n_ranks,
                                          baseline=self.baseline)
+        if self.divergence is not None and merged.train is not None:
+            verdicts = list(verdicts) + self.divergence.analyze(merged.train)
         self.offline_log.append((window.window_id, verdicts))
+
+        culprits_by_node: Dict[int, List[Culprit]] = {}
+        if self.attribution is not None:
+            self.last_attribution = None
+            if verdicts:
+                att = attribute_window(verdicts, window=merged,
+                                       n_ranks=self.n_ranks,
+                                       cfg=self.attribution,
+                                       backend=self.backend)
+                self.last_attribution = att
+                self.attribution_log.append((window.window_id, att))
+                verdicts = self._filter_attributed(verdicts, att)
+                for c in att.culprits:
+                    target = (c.rank if c.kind == "rank" else c.link[0])
+                    culprits_by_node.setdefault(self.node_of(target),
+                                                []).append(c)
 
         by_node: Dict[int, List[Verdict]] = {}
         for v in verdicts:
@@ -197,17 +235,19 @@ class C4DMaster:
                 by_node.setdefault(self.node_of(v.link[0]), []).append(v)
 
         if self.operating_point is not None:
-            return self._confirm_graded(by_node)
+            return self._confirm_graded(by_node, culprits_by_node)
 
         actions: List[NodeAction] = []
         seen = set(by_node)
         for node, vs in by_node.items():
             streak = self._pending.get(node, 0) + 1
-            hang = any(v.syndrome in (COMM_HANG, NONCOMM_HANG) for v in vs)
+            hang = any(v.syndrome in _IMMEDIATE for v in vs)
             # hangs act immediately (the job is already stopped); slow
             # syndromes wait for confirm_windows consecutive confirmations
             if hang or streak >= self.confirm_windows:
-                actions.append(NodeAction(node, vs))
+                actions.append(NodeAction(
+                    node, vs,
+                    culprits=tuple(culprits_by_node.get(node, ()))))
                 self._pending.pop(node, None)
             else:
                 self._pending[node] = streak
@@ -216,9 +256,29 @@ class C4DMaster:
                 self._pending.pop(node)
         return actions
 
+    def _filter_attributed(self, verdicts: List[Verdict],
+                           att: Attribution) -> List[Verdict]:
+        """Keep only verdicts the culprit set explains.
+
+        This is the 'act on the culprit host, not the ring' step: a
+        comm_slow_link verdict on an edge that merely carries a culprit
+        rank's traffic is dropped, so no healthy node is isolated for it.
+        An empty cover (no culprit cleared the bar) falls back to the
+        unfiltered verdicts — attribution narrows actions, never mutes a
+        detection outright."""
+        allowed_ranks = att.rank_set()
+        allowed_links = {c.link for c in att.culprits if c.kind == "link"}
+        kept = [v for v in verdicts
+                if (v.rank is not None and v.rank in allowed_ranks)
+                or (v.link is not None and (v.link in allowed_links
+                                            or v.link[0] in allowed_ranks
+                                            or v.link[1] in allowed_ranks))]
+        return kept or list(verdicts)
+
     # ------------------------------------------------------------------
-    def _confirm_graded(self, by_node: Dict[int, List[Verdict]]
-                        ) -> List[NodeAction]:
+    def _confirm_graded(self, by_node: Dict[int, List[Verdict]],
+                        culprits_by_node: Optional[Dict[int, List[Culprit]]]
+                        = None) -> List[NodeAction]:
         """Precision branch: healthy -> suspect -> confirmed -> isolate.
 
         Escalation is per node; hang syndromes use their own (short)
@@ -227,21 +287,25 @@ class C4DMaster:
         streak, so an intermittent fault flickering at 50 % duty cycle
         still accumulates evidence."""
         op = self.operating_point
+        culprits_by_node = culprits_by_node or {}
         actions: List[NodeAction] = []
         for node in sorted(by_node):
             vs = by_node[node]
+            culprits = tuple(culprits_by_node.get(node, ()))
             tr = self._tracks.setdefault(node, _NodeTrack())
             tr.streak += 1
-            hang = any(v.syndrome in (COMM_HANG, NONCOMM_HANG) for v in vs)
+            hang = any(v.syndrome in _IMMEDIATE for v in vs)
             confirmed = tr.streak >= (op.hang_streak if hang
                                       else op.confirm_streak)
             if confirmed:
-                actions.append(NodeAction(node, vs, action=ACTION_ISOLATE))
+                actions.append(NodeAction(node, vs, action=ACTION_ISOLATE,
+                                          culprits=culprits))
                 self._tracks.pop(node)
             elif tr.state == HEALTHY and tr.streak >= op.suspect_streak:
                 tr.state = SUSPECT
                 actions.append(NodeAction(node, vs,
-                                          action=ACTION_DEPRIORITIZE))
+                                          action=ACTION_DEPRIORITIZE,
+                                          culprits=culprits))
         for node in sorted(self._tracks):
             if node in by_node:
                 continue

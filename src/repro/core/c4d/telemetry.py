@@ -104,6 +104,27 @@ class Heartbeat:
     t: float
 
 
+@dataclass(eq=False)
+class TrainSignals:
+    """Per-rank training-side signals for one monitoring window.
+
+    The divergence channel (Flare, arXiv 2502.05413): anomalies that never
+    touch the network — silent data corruption drifting a rank's gradient
+    norm, loss spikes, a rank emitting NaN/overflow — are invisible to the
+    transport-layer matrices, so the trainer's step hooks export one row
+    per rank and the ``c4d.divergence`` detector analyses them next to the
+    comm syndromes.  Struct-of-arrays like ``TelemetryArrays``: column ``i``
+    across all four arrays is one rank's window summary.
+    """
+    rank: np.ndarray              # int64 global rank ids
+    loss: np.ndarray              # mean per-rank microbatch loss
+    grad_norm: np.ndarray         # pre-clip local gradient norm
+    overflow: np.ndarray          # int64 count of overflow/NaN events
+
+    def n_ranks(self) -> int:
+        return int(self.rank.max()) + 1 if self.rank.size else 0
+
+
 @dataclass
 class TelemetryWindow:
     """Everything the master sees for one monitoring window."""
@@ -114,6 +135,9 @@ class TelemetryWindow:
     heartbeats: List[Heartbeat] = field(default_factory=list)
     t_begin: float = 0.0
     t_end: float = 0.0
+    # training-side divergence channel; None = not exported (the default —
+    # every pre-divergence consumer and golden is untouched)
+    train: Optional[TrainSignals] = None
 
     def n_ranks(self) -> int:
         m = 0
@@ -165,6 +189,8 @@ class TelemetryArrays:
     op_seq: np.ndarray = field(default_factory=lambda: np.empty(0, np.int64))
     t_begin: float = 0.0
     t_end: float = 0.0
+    # training-side divergence channel (shared with TelemetryWindow)
+    train: Optional[TrainSignals] = None
 
     # -- derived columns (same semantics as TransportRecord properties) ----
     def tr_transfer(self) -> np.ndarray:
@@ -202,12 +228,13 @@ class TelemetryArrays:
             hb_t=np.fromiter((h.t for h in hb), float, len(hb)),
             op_rank=np.fromiter((o.rank for o in win.ops), np.int64, len(win.ops)),
             op_seq=np.fromiter((o.seq for o in win.ops), np.int64, len(win.ops)),
-            t_begin=win.t_begin, t_end=win.t_end)
+            t_begin=win.t_begin, t_end=win.t_end, train=win.train)
 
     def to_window(self) -> TelemetryWindow:
         """Unpack into the scalar representation (equivalence tests)."""
         win = TelemetryWindow(window_id=self.window_id, comms=list(self.comms),
-                              t_begin=self.t_begin, t_end=self.t_end)
+                              t_begin=self.t_begin, t_end=self.t_end,
+                              train=self.train)
         for i in range(self.tr_src.size):
             win.transports.append(TransportRecord(
                 iteration=-1, src_rank=int(self.tr_src[i]),

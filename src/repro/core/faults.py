@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core.c4d.telemetry import (CommunicatorInfo, Heartbeat, OpRecord,
                                       TelemetryArrays, TelemetryWindow,
-                                      TransportRecord)
+                                      TrainSignals, TransportRecord)
 
 # ---------------------------------------------------------------------------
 # Taxonomy (Table 1)
@@ -53,6 +53,31 @@ def sample_error_class(rng: np.random.Generator) -> ErrorClass:
     return TABLE1[int(rng.choice(len(TABLE1), p=p / p.sum()))]
 
 
+# Divergence family (Flare, arXiv 2502.05413): anomalies that never touch
+# the network — the comm channel is structurally blind to all three.  The
+# mix is not from Table 1 (the paper only counts comm-surfacing errors);
+# probabilities are the relative rates Flare reports for numeric faults.
+DIVERGENCE_TABLE = [
+    ErrorClass("silent_data_corruption", 0.40, 0.95, "divergence_grad"),
+    ErrorClass("loss_spike",             0.35, 0.90, "divergence_loss"),
+    ErrorClass("nan_rank",               0.25, 1.00, "divergence_overflow"),
+]
+
+DIVERGENCE_KINDS = ("sdc", "loss_spike", "nan_rank")
+
+
+def fault_family(kind: str) -> str:
+    """Which detector vertical owns a fault kind: the train-signal
+    divergence channel or the enhanced-CCL comm channel."""
+    return "divergence" if kind in DIVERGENCE_KINDS else "comm"
+
+
+def sample_divergence_class(rng: np.random.Generator) -> ErrorClass:
+    p = np.array([e.probability for e in DIVERGENCE_TABLE])
+    return DIVERGENCE_TABLE[int(rng.choice(len(DIVERGENCE_TABLE),
+                                           p=p / p.sum()))]
+
+
 # ---------------------------------------------------------------------------
 # Injectable faults (telemetry-level signatures)
 # ---------------------------------------------------------------------------
@@ -60,7 +85,8 @@ def sample_error_class(rng: np.random.Generator) -> ErrorClass:
 @dataclass(frozen=True)
 class Fault:
     kind: str                     # slow_src | slow_dst | slow_link | straggler |
-                                  # comm_hang | noncomm_hang | crash
+                                  # comm_hang | noncomm_hang | crash |
+                                  # sdc | loss_spike | nan_rank
     rank: Optional[int] = None
     link: Optional[Tuple[int, int]] = None
     severity: float = 8.0         # latency multiplier / delay seconds
@@ -100,6 +126,13 @@ class RingJobTelemetry:
         self.rng = np.random.default_rng(seed)
         self.channel_strides = [s for s in channel_strides
                                 if np.gcd(s, n_ranks) == 1] or [1]
+        # training-side signal channel (divergence detection): its own RNG
+        # stream, so exporting train signals never perturbs the pinned comm
+        # jitter sequence above (7919 is an arbitrary fixed stream key)
+        self.base_loss = 2.0
+        self.base_grad = 1.0
+        self.train_jitter = 0.02
+        self.train_rng = np.random.default_rng([seed, 7919])
 
     def window(self, window_id: int = 0,
                faults: Sequence[Fault] = ()) -> TelemetryWindow:
@@ -256,6 +289,40 @@ class RingJobTelemetry:
             t_begin=0.0, t_end=I * op_period)
 
 
+    def train_signals(self, window_id: int = 0,
+                      faults: Sequence[Fault] = ()) -> TrainSignals:
+        """Per-rank training signals for one window (the Flare channel).
+
+        Healthy BSP ranks see statistically identical shards: loss decays
+        slowly with the window index and both loss and grad-norm carry a
+        small iid jitter.  Divergence faults perturb only the culprit
+        rank's column: ``sdc`` inflates the gradient norm (with a mild
+        loss echo), ``loss_spike`` inflates the loss, ``nan_rank`` emits
+        overflow events.  Draws come from ``train_rng`` only — the comm
+        jitter stream is untouched whether or not this is called.
+        """
+        n = self.n
+        jit = self.train_rng.standard_normal(2 * n).reshape(2, n)
+        decay = 1.0 / (1.0 + 0.01 * window_id)
+        loss = np.abs(self.base_loss * decay
+                      * (1 + self.train_jitter * jit[0])) + 1e-6
+        grad = np.abs(self.base_grad
+                      * (1 + self.train_jitter * jit[1])) + 1e-6
+        overflow = np.zeros(n, np.int64)
+        for f in faults:
+            if f.rank is None or not (0 <= f.rank < n):
+                continue
+            if f.kind == "sdc":
+                grad[f.rank] *= f.severity
+                loss[f.rank] *= 1 + 0.05 * max(f.severity - 1.0, 0.0)
+            elif f.kind == "loss_spike":
+                loss[f.rank] *= f.severity
+            elif f.kind == "nan_rank":
+                overflow[f.rank] += max(int(round(f.severity)), 1)
+        return TrainSignals(rank=np.arange(n, dtype=np.int64),
+                            loss=loss, grad_norm=grad, overflow=overflow)
+
+
 def fault_for_class(cls: ErrorClass, rank: int, n_ranks: int,
                     rng: np.random.Generator) -> Fault:
     """Instantiate a concrete telemetry fault for a Table-1 error class."""
@@ -265,6 +332,13 @@ def fault_for_class(cls: ErrorClass, rank: int, n_ranks: int,
         return Fault("comm_hang", rank=rank)
     if cls.syndrome == "comm_slow":
         return Fault("slow_src", rank=rank, severity=float(rng.uniform(5, 15)))
+    if cls.syndrome == "divergence_grad":
+        return Fault("sdc", rank=rank, severity=float(rng.uniform(3, 8)))
+    if cls.syndrome == "divergence_loss":
+        return Fault("loss_spike", rank=rank,
+                     severity=float(rng.uniform(6, 20)))
+    if cls.syndrome == "divergence_overflow":
+        return Fault("nan_rank", rank=rank, severity=float(rng.uniform(1, 4)))
     # link_slow
     return Fault("slow_link", link=(rank, (rank + 1) % n_ranks),
                  severity=float(rng.uniform(5, 15)))

@@ -24,8 +24,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.c4d.attribution import AttributionConfig
+from repro.core.c4d.divergence import DivergenceDetector
 from repro.core.c4d.master import C4DMaster, NodeAction
-from repro.core.faults import (ErrorClass, Fault, RingJobTelemetry,
+from repro.core.faults import (DIVERGENCE_KINDS, ErrorClass, Fault,
+                               RingJobTelemetry, fault_family,
                                fault_for_class)
 
 
@@ -39,6 +42,11 @@ class DetectionOutcome:
     acted: bool = False             # master issued any action at all
     syndromes: Tuple[str, ...] = ()
     links: Tuple[Tuple[int, int], ...] = ()   # implicated telemetry links
+    family: str = "comm"            # detector vertical ("comm"/"divergence")
+    culprit_ranks: Tuple[int, ...] = ()       # attributed root-cause ranks
+    culprit_hit: Optional[bool] = None        # injected rank in culprit set
+                                              # (None: attribution off / no
+                                              #  ground-truth rank)
 
 
 @dataclass
@@ -64,24 +72,34 @@ class DetectionHarness:
     window_period_s: Optional[float] = None   # default: master's 30 s
     vectorized: bool = True
     backend: Optional[str] = None             # detector kernels; None = default
+    #: root-cause attribution (opt-in): a config makes every per-fault
+    #: master run the dependency cover and the outcome carry culprit ranks
+    attribution: Optional[AttributionConfig] = None
 
-    def _master(self) -> C4DMaster:
+    def _master(self, divergence: bool = False) -> C4DMaster:
         m = C4DMaster(n_ranks=self.telemetry.n,
                       ranks_per_node=self.ranks_per_node,
-                      backend=self.backend)
+                      backend=self.backend,
+                      attribution=self.attribution,
+                      divergence=DivergenceDetector() if divergence else None)
         if self.window_period_s is not None:
             m.window_period_s = self.window_period_s
         return m
 
     # ------------------------------------------------------------------
     def detect_faults(self, faults: Sequence[Fault],
-                      expected_node: Optional[int] = None) -> DetectionOutcome:
+                      expected_node: Optional[int] = None,
+                      expected_rank: Optional[int] = None) -> DetectionOutcome:
         """Feed windows until the master acts (or ``max_windows`` pass).
 
         ``expected_node``: ground-truth node; the outcome is ``localized``
         iff some action lands on it.  With no ground truth, any action
-        counts as localised."""
-        master = self._master()
+        counts as localised.  ``expected_rank`` (attribution only): the
+        ground-truth culprit; the outcome's ``culprit_hit`` records whether
+        the attributed set contains it.  A divergence-family fault in the
+        list turns on the train-signal channel for this run."""
+        divergence = any(f.kind in DIVERGENCE_KINDS for f in faults)
+        master = self._master(divergence=divergence)
         latency = 0.0
         actions: List[NodeAction] = []
         windows = 0
@@ -89,23 +107,36 @@ class DetectionHarness:
                  else self.telemetry.window)
         for w in range(self.max_windows):
             win = synth(window_id=w, faults=list(faults))
+            if divergence:
+                win.train = self.telemetry.train_signals(
+                    window_id=w, faults=list(faults))
             actions = master.ingest(win)
             latency += master.window_period_s
             windows = w + 1
             if actions:
                 break
+        family = fault_family(faults[0].kind) if faults else "comm"
         if not actions:
-            return DetectionOutcome(False, latency, -1, windows)
+            return DetectionOutcome(False, latency, -1, windows,
+                                    family=family)
         syndromes = tuple(v.syndrome for a in actions for v in a.verdicts)
         links = tuple(v.link for a in actions for v in a.verdicts
                       if v.link is not None)
+        culprit_ranks: Tuple[int, ...] = ()
+        culprit_hit: Optional[bool] = None
+        if self.attribution is not None and master.last_attribution is not None:
+            culprit_ranks = tuple(sorted(master.last_attribution.rank_set()))
+            if expected_rank is not None:
+                culprit_hit = expected_rank in set(culprit_ranks)
         if expected_node is None:
             hit, node = True, actions[0].node_id
         else:
             hit = any(a.node_id == expected_node for a in actions)
             node = expected_node
         return DetectionOutcome(hit, latency, node, windows, acted=True,
-                                syndromes=syndromes, links=links)
+                                syndromes=syndromes, links=links,
+                                family=family, culprit_ranks=culprit_ranks,
+                                culprit_hit=culprit_hit)
 
     def detect_class(self, cls: ErrorClass,
                      rng: np.random.Generator) -> DetectionOutcome:
@@ -120,7 +151,8 @@ class DetectionHarness:
         rank = int(rng.integers(0, n_ranks))
         fault = fault_for_class(cls, rank, n_ranks, rng)
         expected = rank // self.ranks_per_node
-        out = self.detect_faults([fault], expected_node=expected)
+        out = self.detect_faults([fault], expected_node=expected,
+                                 expected_rank=rank)
         if not out.acted:
             return out
         if rng.random() > cls.localization_rate:

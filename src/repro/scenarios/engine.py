@@ -73,6 +73,9 @@ class CampaignEngine:
         faults = down.fault_records
         lat = [f["detection_s"] for f in faults]
         hits = sum(1 for f in faults if f["localized"])
+        att_attempts = sum(1 for f in faults
+                           if f.get("culprit_hit") is not None)
+        att_hits = sum(1 for f in faults if f.get("culprit_hit"))
         return {
             "scenario": spec.name,
             "description": spec.description,
@@ -88,6 +91,9 @@ class CampaignEngine:
                 "localization_hits": hits,
                 "localization_accuracy":
                     hits / len(faults) if faults else 1.0,
+                # root-cause attribution (0/0 unless spec.attribution)
+                "attribution_attempts": att_attempts,
+                "attribution_hits": att_hits,
                 "faults": faults,
             },
             "network": c4d.network_report(),

@@ -126,6 +126,76 @@ def fault_during_restart(seed: int = 0) -> ScenarioSpec:
 
 
 # ---------------------------------------------------------------------------
+# divergence family (Flare-style train-signal anomalies) + attribution
+# ---------------------------------------------------------------------------
+
+@register
+def silent_data_corruption(seed: int = 0) -> ScenarioSpec:
+    return ScenarioSpec(
+        name="silent_data_corruption",
+        description="One rank silently corrupts its gradients (SDC): no "
+                    "comm syndrome at all — only the divergence channel's "
+                    "grad-norm analysis can see it.  The train-signal "
+                    "detector must localise the rank and trigger the full "
+                    "isolation cycle.",
+        paper_ref="Flare (arXiv 2502.05413) divergence detection; "
+                  "ROADMAP new-telemetry-channel item",
+        seed=seed, duration_s=2 * 3600.0,
+        divergence=True,
+        jobs=(JobSpec(0, tuple(range(16))),),
+        events=(InjectFault(t=40 * MIN, job_id=0, kind="sdc",
+                            rank=9, severity=5.0),),
+        assertions=Assertions(max_detection_s=90.0, min_localization=1.0,
+                              min_restarts=1),
+    )
+
+
+@register
+def loss_spike_cascade(seed: int = 0) -> ScenarioSpec:
+    return ScenarioSpec(
+        name="loss_spike_cascade",
+        description="A loss-spiking rank followed by a NaN-producing rank "
+                    "an hour later: the loss spike waits out the "
+                    "confirmation streak, the overflow acts immediately "
+                    "(hang-like) — both full isolation cycles, zero comm "
+                    "telemetry involved.",
+        paper_ref="Flare (arXiv 2502.05413); overflow = immediate action",
+        seed=seed, duration_s=3 * 3600.0,
+        divergence=True,
+        jobs=(JobSpec(0, tuple(range(16))),),
+        events=(InjectFault(t=30 * MIN, job_id=0, kind="loss_spike",
+                            rank=14, severity=12.0),
+                InjectFault(t=90 * MIN, job_id=0, kind="nan_rank",
+                            rank=26, severity=2.0)),
+        assertions=Assertions(max_detection_s=90.0, min_localization=1.0,
+                              min_restarts=2),
+    )
+
+
+@register
+def degraded_pcie_attribution(seed: int = 0) -> ScenarioSpec:
+    return ScenarioSpec(
+        name="degraded_pcie_attribution",
+        description="The silent-PCIe drill rerun with root-cause "
+                    "attribution on, plus a genuine bad cable later: the "
+                    "dependency cover must name the culprit rank (not just "
+                    "its ring) for the host fault and the exact link for "
+                    "the cable, so isolation lands on the culprit host.",
+        paper_ref="Mycroft (arXiv 2509.03018) dependency attribution; "
+                  "§3.1 Case 1",
+        seed=seed, duration_s=3 * 3600.0,
+        attribution=True,
+        jobs=(JobSpec(0, tuple(range(16))),),
+        events=(InjectFault(t=33 * MIN, job_id=0, kind="slow_src",
+                            rank=13, severity=9.0),
+                InjectFault(t=100 * MIN, job_id=0, kind="slow_link",
+                            rank=5, severity=10.0)),
+        assertions=Assertions(min_localization=1.0, min_restarts=2,
+                              min_attribution=1.0),
+    )
+
+
+# ---------------------------------------------------------------------------
 # fabric family (Figs. 9/11/12)
 # ---------------------------------------------------------------------------
 

@@ -30,7 +30,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.c4d.master import OperatingPoint
-from repro.core.faults import sample_error_class
+from repro.core.faults import sample_divergence_class, sample_error_class
 from repro.core.phases import HOURS
 from repro.scenarios.engine import run_scenario
 from repro.scenarios.report import CampaignReport
@@ -75,6 +75,12 @@ class CampaignSpec:
     # fault population (Table 1 mix)
     faults_per_hour: float = 0.75
     link_flaps_per_hour: float = 0.25
+    # divergence-family population (Flare mix: SDC / loss spike / NaN).
+    # 0.0 (the default) draws nothing and leaves every pre-existing
+    # campaign's RNG stream and report bit-identical.
+    divergence_faults_per_hour: float = 0.0
+    # root-cause attribution per trial (Mycroft dependency cover)
+    attribution: bool = False
     flap_outage_s: Tuple[float, float] = (300.0, 1800.0)
     apply_localization_ceiling: bool = True
     checkpoint_period_s: float = 600.0
@@ -143,6 +149,16 @@ def sample_trial(spec: CampaignSpec, trial: int) -> ScenarioSpec:
         events.append(StartJob(t=start, job_id=j, hosts=(h, h + half)))
         if stop < spec.duration_s:
             events.append(StopJob(t=stop, job_id=j))
+    # divergence-family population (guarded: a poisson draw at rate 0 would
+    # still consume RNG state and shift every pre-existing campaign golden)
+    if spec.divergence_faults_per_hour > 0:
+        n_div = int(rng.poisson(spec.divergence_faults_per_hour
+                                * spec.duration_s / HOURS))
+        for t in np.sort(rng.uniform(0.0, spec.duration_s, n_div)):
+            cls = sample_divergence_class(rng)
+            events.append(InjectFault(t=float(t), job_id=0,
+                                      error_class=cls.name,
+                                      rank=int(rng.integers(0, spec.gpus))))
 
     return ScenarioSpec(
         name=f"{spec.name}_trial{trial:03d}",
@@ -162,6 +178,8 @@ def sample_trial(spec: CampaignSpec, trial: int) -> ScenarioSpec:
         streaming_tick_s=spec.streaming_tick_s,
         operating_point=spec.operating_point,
         backend=spec.backend,
+        attribution=spec.attribution,
+        divergence=spec.divergence_faults_per_hour > 0,
         jobs=(JobSpec(0, tuple(range(spec.n_hosts))),),
         events=tuple(events),
     )
@@ -216,7 +234,8 @@ def names() -> List[str]:
 def get(name: str, seed: Optional[int] = None, n_trials: Optional[int] = None,
         gpus: Optional[int] = None,
         operating_point: Optional[OperatingPoint] = None,
-        backend: Optional[str] = None) -> CampaignSpec:
+        backend: Optional[str] = None,
+        attribution: Optional[bool] = None) -> CampaignSpec:
     """Look up a shipped campaign, with CLI-style overrides applied."""
     try:
         spec = _REGISTRY[name]()
@@ -224,7 +243,8 @@ def get(name: str, seed: Optional[int] = None, n_trials: Optional[int] = None,
         raise KeyError(f"unknown campaign {name!r}; choose from {names()}")
     over = {k: v for k, v in
             (("seed", seed), ("n_trials", n_trials), ("gpus", gpus),
-             ("operating_point", operating_point), ("backend", backend))
+             ("operating_point", operating_point), ("backend", backend),
+             ("attribution", attribution))
             if v is not None}
     return dataclasses.replace(spec, **over) if over else spec
 
@@ -270,6 +290,24 @@ def paper_claims() -> CampaignSpec:
         paper_ref="abstract (30 %/15 %/30-45 %), Table 1, Table 3",
         n_trials=32, gpus=256, duration_s=6 * HOURS,
         faults_per_hour=0.5)
+
+
+@register
+def fleet_mixed() -> CampaignSpec:
+    """Mixed-family campaign: the Table-1 comm population *and* the
+    Flare divergence population in the same trials, attribution on — the
+    per-family precision/recall report this campaign exists to feed."""
+    return CampaignSpec(
+        name="fleet_mixed",
+        description="8 trials at 64 GPUs mixing Table-1 comm faults with "
+                    "divergence faults (SDC / loss spike / NaN) at equal "
+                    "rates, root-cause attribution on: per-family "
+                    "precision/recall + attribution hit rate.",
+        paper_ref="Table 1 mix + Flare divergence families; Mycroft "
+                  "attribution",
+        n_trials=8, gpus=64, duration_s=2 * HOURS,
+        faults_per_hour=0.75, divergence_faults_per_hour=0.75,
+        attribution=True)
 
 
 @register

@@ -76,6 +76,19 @@ class CampaignReport:
             f"p99 {_fmt(ov['mttr_s']['p99'], 0)} s "
             f"(baseline p50 {_fmt(ov['baseline_mttr_s']['p50'], 0)} s)",
         ]
+        fams = det.get("per_family", {})
+        if len(fams) > 1:
+            for fam in sorted(fams):
+                c = fams[fam]
+                lines.append(
+                    f"  {fam:<12}: {c['n_faults']} faults | "
+                    f"precision {c['precision']:.3f} | "
+                    f"recall {c['recall']:.3f}")
+        att = det.get("attribution", {})
+        if att.get("attempts"):
+            lines.append(
+                f"attribution   : {att['hits']}/{att['attempts']} culprit "
+                f"hits ({_fmt(att['hit_rate'], 3)})")
         st = agg.get("streaming")
         if st and st["latency_s"]["n"]:
             lines.append(
@@ -148,6 +161,26 @@ def render_markdown(rep: dict) -> str:
         out.append(f"| fabric events observed | "
                    f"{det['network_observed_rate']:.2f} "
                    f"(edge hit {det['network_edge_hit_rate']:.2f}) |")
+    fams = det.get("per_family", {})
+    if len(fams) > 1:
+        out += [
+            "",
+            "### Per fault family",
+            "",
+            "| family | faults | TP/FP/FN | precision | recall |",
+            "|---|---|---|---|---|",
+        ]
+        for fam in sorted(fams):
+            c = fams[fam]
+            out.append(
+                f"| {fam} | {c['n_faults']} | {c['true_positives']}/"
+                f"{c['false_positives']}/{c['false_negatives']} "
+                f"| {c['precision']:.3f} | {c['recall']:.3f} |")
+    att = det.get("attribution", {})
+    if att.get("attempts"):
+        out.append("")
+        out.append(f"Root-cause attribution: {att['hits']}/{att['attempts']} "
+                   f"culprit-set hits ({_fmt(att['hit_rate'], 3)}).")
     st = rep["aggregates"].get("streaming")
     if st and st["latency_s"]["n"]:
         out += [

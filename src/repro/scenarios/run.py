@@ -62,6 +62,12 @@ def _summary_lines(rep: dict) -> List[str]:
         f"detection     : {det['n_faults']} fault(s), "
         f"mean latency {det['mean_latency_s']:.0f} s, "
         f"localization {det['localization_hits']}/{det['n_faults']}",
+    ]
+    if det.get("attribution_attempts"):
+        lines.append(
+            f"attribution   : {det['attribution_hits']}/"
+            f"{det['attribution_attempts']} culprit-set hits")
+    lines += [
         "downtime      : total {:.0f} s ({:.2%} of run) = det {:.0f} + "
         "diag/iso {:.0f} + post-ckpt {:.0f} + reinit {:.0f}".format(
             down["total_s"], down["fraction_of_duration"],
@@ -155,6 +161,10 @@ def main(argv=None) -> int:
                     help="simulation kernel backend for scenarios and "
                          "campaigns (default: REPRO_SIM_BACKEND env var "
                          "or numpy; see docs/jaxsim.md)")
+    ap.add_argument("--attribution", action="store_true",
+                    help="turn on root-cause attribution (Mycroft-style "
+                         "dependency cover) for every scenario and "
+                         "campaign in this invocation")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write report(s) as JSON: a *.json file, a "
                          "directory (one file per target), or '-' for "
@@ -198,13 +208,15 @@ def main(argv=None) -> int:
     failed: List[str] = []
     for name in targets:
         spec = library.get(name, seed=args.seed if args.seed is not None else 0)
-        if op is not None or args.backend is not None:
+        if op is not None or args.backend is not None or args.attribution:
             import dataclasses
             over = {}
             if op is not None:
                 over["operating_point"] = op
             if args.backend is not None:
                 over["backend"] = args.backend
+            if args.attribution:
+                over["attribution"] = True
             spec = dataclasses.replace(spec, **over)
         rep = run_scenario(spec)
         if args.live:
@@ -228,7 +240,8 @@ def main(argv=None) -> int:
     for name in args.campaign:
         cam = montecarlo.get(name, seed=args.seed, n_trials=args.trials,
                              gpus=args.gpus, operating_point=op,
-                             backend=args.backend)
+                             backend=args.backend,
+                             attribution=True if args.attribution else None)
         t0 = time.perf_counter()
         report = montecarlo.run_campaign(cam, workers=max(args.workers, 1))
         wall = time.perf_counter() - t0

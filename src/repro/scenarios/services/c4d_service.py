@@ -30,9 +30,13 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
+from repro.core.c4d.attribution import AttributionConfig
+from repro.core.c4d.divergence import DivergenceDetector
 from repro.core.c4d.master import (ACTION_DEPRIORITIZE, ACTION_ISOLATE,
                                    ACTION_REPRIORITIZE, C4DMaster)
-from repro.core.faults import TABLE1, Fault, RingJobTelemetry, fault_for_class
+from repro.core.faults import (DIVERGENCE_KINDS, DIVERGENCE_TABLE, TABLE1,
+                               Fault, RingJobTelemetry, fault_family,
+                               fault_for_class)
 from repro.runtime import Service
 from repro.scenarios.services.context import RunContext
 from repro.scenarios.services.events import (FabricTransient, FaultDetected,
@@ -40,9 +44,10 @@ from repro.scenarios.services.events import (FabricTransient, FaultDetected,
                                              NodeCleared, NodeSuspected)
 from repro.scenarios.spec import InjectFault, StopJob
 
-ERROR_CLASSES = {c.name: c for c in TABLE1}
+ERROR_CLASSES = {c.name: c for c in TABLE1 + DIVERGENCE_TABLE}
 _DEFAULT_SEVERITY = {"slow_src": 8.0, "slow_dst": 8.0, "slow_link": 8.0,
-                     "straggler": 20.0}
+                     "straggler": 20.0,
+                     "sdc": 4.0, "loss_spike": 10.0, "nan_rank": 2.0}
 
 
 @dataclass
@@ -56,11 +61,13 @@ class ActiveFault:
     error_class: Optional[str]
     detected_t: Optional[float] = None
     suspected_t: Optional[float] = None      # precision pipeline only
+    family: str = "comm"                     # detector vertical
 
     def record(self) -> dict:
         det = self.detected_t
         return {"job_id": self.job_id, "kind": self.kind,
                 "error_class": self.error_class,
+                "family": self.family,
                 "rank": self.fault.rank if self.fault.rank is not None
                 else list(self.fault.link or ()),
                 "expected_node": self.expected_node,
@@ -93,6 +100,12 @@ class C4DService(Service):
                     n_ranks=spec.telemetry_ranks,
                     ranks_per_node=spec.ranks_per_node,
                     backend=spec.backend)
+            # opt-in verticals on the persistent master; False leaves the
+            # pinned streaming traces untouched
+            if spec.divergence:
+                self.stream_master.divergence = DivergenceDetector()
+            if spec.attribution:
+                self.stream_master.attribution = AttributionConfig()
         self.active: List[ActiveFault] = []
         self.closed: List[ActiveFault] = []
         self.pending_transients: List[Fault] = []
@@ -148,8 +161,13 @@ class C4DService(Service):
         spec = ctx.spec
         fault, expected_node = self._telemetry_fault(ev)
         extra, _ = ctx.bridge_for(run)        # live fabric context, if any
+        # ground-truth culprit rank for attribution scoring: a link fault's
+        # root cause sits at the source endpoint (the drawn victim rank)
+        expected_rank = (fault.rank if fault.rank is not None
+                         else (fault.link[0] if fault.link else None))
         out = ctx.harness.detect_faults([fault] + extra,
-                                        expected_node=expected_node)
+                                        expected_node=expected_node,
+                                        expected_rank=expected_rank)
         if (out.acted and spec.apply_localization_ceiling
                 and ev.error_class is not None
                 and ctx.rng.random() > ERROR_CLASSES[ev.error_class].localization_rate):
@@ -159,7 +177,8 @@ class C4DService(Service):
             self.active.append(ActiveFault(
                 ev.job_id, fault, expected_node,
                 onset_t=self.kernel.clock.now, kind=fault.kind,
-                error_class=ev.error_class))
+                error_class=ev.error_class,
+                family=fault_family(fault.kind)))
 
     def _transient_sweep(self, tr: FabricTransient) -> None:
         """Run the reference pipeline over the bridge for every focus job,
@@ -232,6 +251,12 @@ class C4DService(Service):
                 faults += bf
         win = self.stream_tel.window_arrays(window_id=self.windows,
                                             faults=faults)
+        if self.ctx.spec.divergence:
+            # train-signal channel rides the same window; only divergence
+            # kinds perturb it, comm faults leave the signals healthy
+            win.train = self.stream_tel.train_signals(
+                window_id=self.windows,
+                faults=[f for f in faults if f.kind in DIVERGENCE_KINDS])
         actions = self.stream_master.ingest(win)
         # graded actions (precision branch only; the legacy master emits
         # isolate_restart exclusively, so these lists stay empty and no
@@ -278,6 +303,14 @@ class C4DService(Service):
         recs = [af.record() for af in self.closed]
         lat = [r["latency_s"] for r in recs if r["latency_s"] is not None]
         missed = sum(1 for r in recs if r["detected_t"] is None)
+        by_family: dict = {}
+        for r in recs:
+            fam = by_family.setdefault(r["family"],
+                                       {"n_faults": 0, "detected": 0,
+                                        "missed": 0})
+            fam["n_faults"] += 1
+            fam["detected" if r["detected_t"] is not None
+                else "missed"] += 1
         return {
             "tick_s": self.tick_period_s,
             "windows": self.windows,
@@ -291,6 +324,7 @@ class C4DService(Service):
             "detected": len(lat),
             "missed": missed,
             "latencies_s": lat,
+            "by_family": {k: by_family[k] for k in sorted(by_family)},
             "link_observation_windows": self.link_windows,
             # precision pipeline (all-zero/None under the legacy master)
             "operating_point":

@@ -16,6 +16,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.c4d.attribution import AttributionConfig
 from repro.core.cluster import SimCluster, SteeringService
 from repro.core.faults import Fault, RingJobTelemetry
 from repro.core.topology import ClosTopology
@@ -68,9 +69,10 @@ class RunContext:
         self.steering = SteeringService(self.cluster)
         self.telemetry = RingJobTelemetry(n_ranks=spec.telemetry_ranks,
                                           seed=spec.seed + 1)
-        self.harness = DetectionHarness(self.telemetry,
-                                        ranks_per_node=spec.ranks_per_node,
-                                        backend=spec.backend)
+        self.harness = DetectionHarness(
+            self.telemetry, ranks_per_node=spec.ranks_per_node,
+            backend=spec.backend,
+            attribution=AttributionConfig() if spec.attribution else None)
         self.jobs: Dict[int, JobRun] = {}
         self.finished: List[JobRun] = []
         self.last_result = None             # latest steady-state RateResult

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.faults import fault_family
 from repro.core.phases import HOURS, zero_phases
 from repro.runtime import Service
 from repro.scenarios.services.context import JobRun, RunContext
@@ -120,6 +121,12 @@ class DowntimeService(Service):
         det_s = out.detection_s
         if out.localized:
             node = out.node % spec.n_nodes
+            if out.culprit_ranks:
+                # attribution on: isolate the *attributed* culprit's host
+                # rather than the ring-level node (they agree whenever the
+                # attribution hit, which the drills assert at >= 90%)
+                node = (out.culprit_ranks[0]
+                        // spec.ranks_per_node) % spec.n_nodes
             _, steer_s = ctx.steering.execute(node, t=t, reason=fd.fault.kind)
             diag_s = steer_s + float(ctx.rng.uniform(2 * 60, 8 * 60))
         else:
@@ -145,10 +152,13 @@ class DowntimeService(Service):
         self.fault_records.append({
             "t": t, "job_id": ev.job_id,
             "error_class": ev.error_class, "kind": fault.kind,
+            "family": fault_family(fault.kind),
             "rank": fault.rank if fault.rank is not None else list(fault.link or ()),
             "acted": out.acted, "localized": out.localized,
             "windows": out.windows, "detection_s": det_s,
             "syndromes": list(out.syndromes),
+            "culprit_ranks": list(out.culprit_ranks),
+            "culprit_hit": out.culprit_hit,
             "expected_node": fd.expected_node,
             "phases": {"detection_s": det_s, "diagnosis_isolation_s": diag_s,
                        "post_checkpoint_s": post_ckpt_s,

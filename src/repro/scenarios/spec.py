@@ -33,11 +33,13 @@ class InjectFault(Event):
     """A node-level hardware fault surfacing through enhanced-CCL telemetry.
 
     Either ``error_class`` (a Table-1 name: cuda_error, ecc_nvlink,
-    nccl_timeout, ack_timeout, network_other) or an explicit telemetry
+    nccl_timeout, ack_timeout, network_other — or a divergence-family name:
+    silent_data_corruption, loss_spike, nan_rank) or an explicit telemetry
     ``kind`` (crash, comm_hang, noncomm_hang, slow_src, slow_dst, slow_link,
-    straggler).  ``rank`` is a telemetry rank; drawn from the spec RNG when
-    omitted.  Drives the real C4D pipeline: detection -> isolation ->
-    checkpoint-restart, accounted in Table-3 phases.
+    straggler, sdc, loss_spike, nan_rank).  ``rank`` is a telemetry rank;
+    drawn from the spec RNG when omitted.  Drives the real C4D pipeline:
+    detection -> isolation -> checkpoint-restart, accounted in Table-3
+    phases.
     """
     job_id: int = 0
     error_class: Optional[str] = None
@@ -103,6 +105,7 @@ class Assertions:
     """Pass/fail gates evaluated into the report (CLI exits non-zero on fail)."""
     max_detection_s: Optional[float] = None
     min_localization: Optional[float] = None       # hits / faults
+    min_attribution: Optional[float] = None        # culprit hits / attempts
     max_downtime_frac: Optional[float] = None      # Table-3 total / duration
     min_goodput_frac: Optional[float] = None       # focus-job progress / ideal
     min_restarts: Optional[int] = None
@@ -142,6 +145,14 @@ class ScenarioSpec:
     # module default (REPRO_SIM_BACKEND env var or "numpy"), so existing
     # specs and goldens are untouched
     backend: Optional[str] = None
+    # root-cause attribution: the Mycroft-style dependency cover narrows
+    # ring-level verdicts to culprit ranks/links (False keeps the pinned
+    # verdict->node fold and byte-identical pre-PR-8 reports)
+    attribution: bool = False
+    # divergence channel: export per-rank train signals and run the
+    # Flare-style detector next to the comm syndromes (False: no train
+    # telemetry is synthesised at all)
+    divergence: bool = False
 
     jobs: Tuple[JobSpec, ...] = ()
     events: Tuple[Event, ...] = ()
@@ -183,6 +194,10 @@ def evaluate_assertions(a: Assertions, report: dict,
         acc = det["localization_accuracy"]
         checks.append(check("min_localization", acc >= a.min_localization,
                             acc, a.min_localization))
+    if a.min_attribution is not None and det.get("attribution_attempts"):
+        rate = det["attribution_hits"] / det["attribution_attempts"]
+        checks.append(check("min_attribution", rate >= a.min_attribution,
+                            rate, a.min_attribution))
     if a.max_downtime_frac is not None:
         frac = report["downtime"]["fraction_of_duration"]
         checks.append(check("max_downtime_frac", frac <= a.max_downtime_frac,

@@ -168,6 +168,20 @@ def trial_metrics(report: dict) -> dict:
     tp = sum(1 for f in acted if f["localized"])
     net = report["network"]["detections"]
     streaming = report.get("streaming", {})
+    # per-family detection quality (comm vs divergence verticals)
+    by_family: dict = {}
+    for f in faults:
+        fam = by_family.setdefault(f.get("family", "comm"),
+                                   {"n_faults": 0, "true_positives": 0,
+                                    "false_positives": 0,
+                                    "false_negatives": 0})
+        fam["n_faults"] += 1
+        if not f["acted"]:
+            fam["false_negatives"] += 1
+        elif f["localized"]:
+            fam["true_positives"] += 1
+        else:
+            fam["false_positives"] += 1
     out = {
         "scenario": report["scenario"],
         "seed": report["seed"],
@@ -178,6 +192,9 @@ def trial_metrics(report: dict) -> dict:
         "true_positives": tp,
         "false_positives": len(acted) - tp,
         "false_negatives": det["n_faults"] - len(acted),
+        "by_family": {k: by_family[k] for k in sorted(by_family)},
+        "attribution_attempts": det.get("attribution_attempts", 0),
+        "attribution_hits": det.get("attribution_hits", 0),
         "detection_latencies_s": [f["detection_s"] for f in acted],
         "mttr_s": [sum(f["phases"].values()) for f in faults],
         "baseline_mttr_s": [baseline_fault_downtime_s(f) for f in faults],
@@ -255,6 +272,29 @@ def aggregate(trials: List[dict]) -> dict:
     net_obs = sum(t["network_observed"] for t in trials)
     net_hit = sum(t["network_edge_hits"] for t in trials)
 
+    # per-family P/R: the same TP/FP/FN convention, split by detector
+    # vertical (comm vs divergence), summed across trials
+    fam_totals: dict = {}
+    for t in trials:
+        for fam, c in t.get("by_family", {}).items():
+            agg = fam_totals.setdefault(fam, {"n_faults": 0,
+                                              "true_positives": 0,
+                                              "false_positives": 0,
+                                              "false_negatives": 0})
+            for k in agg:
+                agg[k] += c[k]
+    per_family = {}
+    for fam in sorted(fam_totals):
+        c = fam_totals[fam]
+        ftp, ffp = c["true_positives"], c["false_positives"]
+        per_family[fam] = {
+            **c,
+            "precision": ftp / (ftp + ffp) if (ftp + ffp) else 1.0,
+            "recall": ftp / c["n_faults"] if c["n_faults"] else 1.0,
+        }
+    att_attempts = sum(t.get("attribution_attempts", 0) for t in trials)
+    att_hits = sum(t.get("attribution_hits", 0) for t in trials)
+
     # precision = TP/(TP+FP); recall = TP/(TP+FP+FN).  A mislocalized
     # action is an FP *and* a miss of the true fault, so it sits in the
     # denominator of both; TP+FP+FN always equals the injected-fault count.
@@ -263,6 +303,12 @@ def aggregate(trials: List[dict]) -> dict:
         "true_positives": tp, "false_positives": fp, "false_negatives": fn,
         "precision": tp / (tp + fp) if (tp + fp) else 1.0,
         "recall": tp / (tp + fp + fn) if n_faults else 1.0,
+        "per_family": per_family,
+        "attribution": {
+            "attempts": att_attempts,
+            "hits": att_hits,
+            "hit_rate": att_hits / att_attempts if att_attempts else None,
+        },
         "latency_s": percentiles(lat),
         "network_events": net_ev,
         "network_observed_rate": net_obs / net_ev if net_ev else None,

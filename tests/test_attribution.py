@@ -1,0 +1,331 @@
+"""Root-cause attribution: goldens, soundness, and invariance properties.
+
+PR 8 added the Mycroft-style dependency layer (``core/c4d/attribution.py``)
+that narrows slow/hang verdicts to a ranked culprit set.  Three contracts
+are pinned here:
+
+* the **default path is bit-identical to PR 7** — with ``attribution=None``
+  the master's verdicts and streaming action sequences reproduce the
+  pre-attribution goldens verbatim;
+* **soundness** — whenever a slow/hang fault names a rank, that rank is in
+  the attributed culprit set (>= 90% over a seed x kind grid, and exactly
+  on the pinned fixtures);
+* **determinism/invariance** — culprit sets do not depend on verdict order
+  or on agent-report registration order, and are bounded by
+  ``max_culprits`` plus the direct (non-matrix) verdicts.
+"""
+import json
+import random
+
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro.core.c4d.agent import C4Agent, reports_to_window
+from repro.core.c4d.attribution import (Attribution, AttributionConfig,
+                                        attribute_window)
+from repro.core.c4d.master import C4DMaster
+from repro.core.faults import Fault, RingJobTelemetry
+
+N_RANKS = 32
+RANKS_PER_NODE = 8
+
+
+def _one_window(seed, faults, attribution=None):
+    tel = RingJobTelemetry(n_ranks=N_RANKS, seed=seed)
+    master = C4DMaster(n_ranks=N_RANKS, ranks_per_node=RANKS_PER_NODE,
+                       attribution=attribution)
+    master.ingest(tel.window_arrays(window_id=0, faults=faults))
+    return master
+
+
+def _stream_actions(seed, fault, fault_from, n_windows, attribution=None):
+    tel = RingJobTelemetry(n_ranks=N_RANKS, seed=seed)
+    master = C4DMaster(n_ranks=N_RANKS, ranks_per_node=RANKS_PER_NODE,
+                       attribution=attribution)
+    seq = []
+    for w in range(n_windows):
+        faults = [fault] if w >= fault_from else []
+        actions = master.ingest(tel.window_arrays(window_id=w, faults=faults))
+        seq.append([[a.node_id, a.action,
+                     sorted({v.syndrome for v in a.verdicts})]
+                    for a in actions])
+    return seq
+
+
+# ---------------------------------------------------------------------------
+# PR 7 default-path goldens: attribution off must change nothing.
+
+# streaming slow_src (n_ranks=32, seed=7, rank=13 sev=9.0 from window 4)
+GOLDEN_STREAM_SLOW_SRC = [
+    [], [], [],
+    [[3, "isolate_restart", ["comm_slow_link"]]],
+    [],
+    [[1, "isolate_restart", ["comm_slow_source"]]],
+    [],
+    [[1, "isolate_restart", ["comm_slow_source"]]],
+    [],
+    [[1, "isolate_restart", ["comm_slow_source"]]],
+]
+
+# single-window sorted verdict tuples: (syndrome, rank, link, round(score, 9))
+GOLDEN_VERDICTS = {
+    3: [["comm_slow_link", None, [23, 28], 8.070866105],
+        ["comm_slow_source", 5, None, 683.915970142]],
+    5: [["comm_slow_link", None, [4, 5], 698.494479504]],
+    9: [["comm_slow_link", None, [4, 11], 5.40979629],
+        ["noncomm_slow", 17, None, 11327.172970244]],
+}
+GOLDEN_FAULTS = {
+    3: [Fault("slow_src", rank=5, severity=9.0)],
+    5: [Fault("slow_link", link=(4, 5), severity=10.0)],
+    9: [Fault("straggler", rank=17, severity=25.0)],
+}
+
+
+def test_default_stream_actions_pinned_to_pr7():
+    got = _stream_actions(seed=7, fault=Fault("slow_src", rank=13,
+                                              severity=9.0),
+                          fault_from=4, n_windows=10)
+    assert got == GOLDEN_STREAM_SLOW_SRC
+
+
+def test_default_verdicts_pinned_to_pr7():
+    for seed, want in GOLDEN_VERDICTS.items():
+        master = _one_window(seed, GOLDEN_FAULTS[seed])
+        got = sorted([v.syndrome, v.rank,
+                      list(v.link) if v.link else None,
+                      round(v.score, 9)]
+                     for v in master.offline_log[-1][1])
+        assert got == want, seed
+        assert master.last_attribution is None
+
+
+# ---------------------------------------------------------------------------
+# Attribution goldens on the same fixed-seed windows.
+
+# seed -> (faults, [[kind, rank, link, round(score, 6), cells], ...])
+GOLDEN_ATTRIBUTION = {
+    3: (GOLDEN_FAULTS[3],
+        [["rank", 5, None, 2718.601432, 4]], 5, 4),
+    5: (GOLDEN_FAULTS[5],
+        [["link", None, [4, 5], 698.49448, 1]], 1, 1),
+    9: (GOLDEN_FAULTS[9],
+        [["rank", 17, None, 11327.17297, 0],
+         ["rank", 17, None, 45306.76777, 4]], 5, 4),
+    11: ([Fault("slow_src", rank=5, severity=9.0),
+          Fault("slow_link", link=(20, 21), severity=12.0)],
+         [["rank", 5, None, 1927.892771, 4],
+          ["link", None, [20, 21], 661.122214, 1]], 5, 5),
+}
+
+
+def test_attribution_culprits_pinned():
+    for seed, (faults, want, hot, explained) in GOLDEN_ATTRIBUTION.items():
+        master = _one_window(seed, faults, attribution=AttributionConfig())
+        att = master.last_attribution
+        assert att is not None, seed
+        got = [[c.kind, c.rank, list(c.link) if c.link else None,
+                round(c.score, 6), c.cells] for c in att.culprits]
+        assert got == want, seed
+        assert att.hot_cells == hot, seed
+        assert att.explained_cells == explained, seed
+
+
+def test_attribution_streaming_actions_carry_culprits():
+    """Same fixture as the PR 7 slow_src golden, attribution on: the action
+    sequence keeps its shape and each confirmed action names rank 13."""
+    tel = RingJobTelemetry(n_ranks=N_RANKS, seed=7)
+    master = C4DMaster(n_ranks=N_RANKS, ranks_per_node=RANKS_PER_NODE,
+                       attribution=AttributionConfig())
+    fault = Fault("slow_src", rank=13, severity=9.0)
+    want = [
+        [], [], [],
+        [[3, "isolate_restart", ["comm_slow_link"], [24, 25]]],
+        [],
+        [[1, "isolate_restart", ["comm_slow_source"], [13]]],
+        [],
+        [[1, "isolate_restart", ["comm_slow_source"], [13]]],
+        [],
+        [[1, "isolate_restart", ["comm_slow_source"], [13]]],
+    ]
+    seq = []
+    for w in range(10):
+        faults = [fault] if w >= 4 else []
+        actions = master.ingest(tel.window_arrays(window_id=w, faults=faults))
+        seq.append([[a.node_id, a.action,
+                     sorted({v.syndrome for v in a.verdicts}),
+                     sorted({r for c in a.culprits for r in c.ranks()})]
+                    for a in actions])
+    assert seq == want
+
+
+def test_attribution_drill_golden():
+    """degraded_pcie_attribution seed 0: both injected faults attributed."""
+    from repro.scenarios import library
+    from repro.scenarios.engine import run_scenario
+
+    rep = run_scenario(library.get("degraded_pcie_attribution", seed=0))
+    assert rep["passed"], [c for c in rep["checks"] if not c["ok"]]
+    det = rep["detection"]
+    assert rep["restarts"] == 2
+    assert det["attribution_attempts"] == 2
+    assert det["attribution_hits"] == 2
+    assert [f["culprit_ranks"] for f in det["faults"]] == [[13], [5, 6]]
+    np.testing.assert_allclose(rep["downtime"]["total_s"],
+                               1987.1232169549928, rtol=0, atol=0)
+    np.testing.assert_allclose(rep["goodput"]["fraction"],
+                               0.8160071095412044, rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Soundness: the injected rank is in the attributed culprit set.
+
+def _grid_cases():
+    cases = []
+    for seed in range(8):
+        for kind in ("slow_src", "straggler", "comm_hang", "noncomm_hang"):
+            rank = (5 * seed + 3) % N_RANKS
+            sev = {"slow_src": 9.0, "straggler": 25.0}.get(kind, 1.0)
+            cases.append((seed, kind, rank, sev))
+    return cases
+
+
+def test_attribution_soundness_over_grid():
+    hits, total = 0, 0
+    for seed, kind, rank, sev in _grid_cases():
+        master = _one_window(seed, [Fault(kind, rank=rank, severity=sev)],
+                             attribution=AttributionConfig())
+        att = master.last_attribution
+        total += 1
+        if att is not None and rank in att.rank_set():
+            hits += 1
+    # ISSUE acceptance: injected root-cause rank in the attributed set on
+    # >= 90% of slow/hang trials.  The grid currently attributes all of
+    # them; keep head-room so a borderline window does not flake.
+    assert hits / total >= 0.90, (hits, total)
+
+
+def test_attribution_bounded_culprit_set():
+    cfg = AttributionConfig()
+    for seed, kind, rank, sev in _grid_cases():
+        master = _one_window(seed, [Fault(kind, rank=rank, severity=sev)],
+                             attribution=cfg)
+        att = master.last_attribution
+        if att is None:
+            continue
+        matrix_picks = sum(1 for c in att.culprits if c.cells > 0)
+        assert matrix_picks <= cfg.max_culprits
+        # direct (hang / straggler / divergence) culprits are one per
+        # verdicted rank, so the whole set stays small
+        assert len(att.rank_set()) <= cfg.max_culprits + 2
+
+
+# ---------------------------------------------------------------------------
+# Invariance: verdict order, agent registration order.
+
+def test_attribute_window_verdict_permutation_invariant():
+    tel = RingJobTelemetry(n_ranks=N_RANKS, seed=3)
+    win = tel.window_arrays(window_id=0, faults=[
+        Fault("slow_src", rank=5, severity=9.0),
+        Fault("slow_link", link=(20, 21), severity=12.0),
+    ])
+    base = C4DMaster(n_ranks=N_RANKS, ranks_per_node=RANKS_PER_NODE)
+    base.ingest(win)
+    verdicts = list(base.offline_log[-1][1])
+
+    def snap(att: Attribution):
+        return [(c.kind, c.rank, c.link, c.score, c.cells)
+                for c in att.culprits]
+
+    ref = snap(attribute_window(verdicts, window=win, n_ranks=N_RANKS))
+    rng = random.Random(0)
+    for _ in range(5):
+        shuffled = list(verdicts)
+        rng.shuffle(shuffled)
+        assert snap(attribute_window(shuffled, window=win,
+                                     n_ranks=N_RANKS)) == ref
+
+
+def test_agent_registration_order_invariant():
+    """Merging C4a agent reports in any order yields the same window, hence
+    the same attribution."""
+    tel = RingJobTelemetry(n_ranks=N_RANKS, seed=3)
+    win = tel.window(window_id=0,
+                     faults=[Fault("slow_src", rank=5, severity=9.0)])
+    agents = [C4Agent(node_id=n,
+                      ranks=range(n * RANKS_PER_NODE,
+                                  (n + 1) * RANKS_PER_NODE))
+              for n in range(N_RANKS // RANKS_PER_NODE)]
+    reports = [a.collect(win) for a in agents]
+
+    def run(order):
+        merged = reports_to_window([reports[i] for i in order], win)
+        master = C4DMaster(n_ranks=N_RANKS, ranks_per_node=RANKS_PER_NODE,
+                           attribution=AttributionConfig())
+        master.ingest(merged)
+        att = master.last_attribution
+        return [(c.kind, c.rank, c.link, c.score) for c in att.culprits]
+
+    ref = run(list(range(len(reports))))
+    assert run(list(reversed(range(len(reports))))) == ref
+    assert run([2, 0, 3, 1]) == ref
+
+
+def test_engine_service_registration_order_invariant():
+    """The attribution drill report is identical when the engine registers
+    its services in reverse order (event delivery is by priority)."""
+    from repro.scenarios import library
+    from repro.scenarios.engine import CampaignEngine, build_services
+
+    spec = library.get("degraded_pcie_attribution", seed=0)
+    fwd = CampaignEngine(spec).run()
+    rev = CampaignEngine(
+        spec, service_factory=lambda ctx: list(reversed(build_services(ctx)))
+    ).run()
+    assert json.dumps(fwd, sort_keys=True, default=str) == \
+        json.dumps(rev, sort_keys=True, default=str)
+
+
+# ---------------------------------------------------------------------------
+# Property tests (skipped gracefully when hypothesis is absent).
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=200),
+       rank=st.integers(min_value=0, max_value=N_RANKS - 1),
+       severity=st.floats(min_value=8.0, max_value=20.0))
+def test_property_slow_src_culprit_contains_rank(seed, rank, severity):
+    master = _one_window(seed, [Fault("slow_src", rank=rank,
+                                      severity=severity)],
+                         attribution=AttributionConfig())
+    att = master.last_attribution
+    assert att is not None
+    assert rank in att.rank_set()
+    assert sum(1 for c in att.culprits if c.cells > 0) <= 3
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=100),
+       rank=st.integers(min_value=0, max_value=N_RANKS - 1))
+def test_property_hang_attribution_is_exact(seed, rank):
+    master = _one_window(seed, [Fault("comm_hang", rank=rank)],
+                         attribution=AttributionConfig())
+    att = master.last_attribution
+    assert att is not None
+    assert rank in att.rank_set()
+
+
+def test_healthy_window_attribution_matches_verdicts():
+    """Attribution never invents culprits: with no verdicts it stays None,
+    and on a spurious single-link verdict (the detector's known fault-free
+    FP mode) the culprit set is exactly that link's endpoints."""
+    for seed in range(6):
+        master = _one_window(seed, [], attribution=AttributionConfig())
+        verdicts = master.offline_log[-1][1]
+        att = master.last_attribution
+        if not verdicts:
+            assert att is None
+        else:
+            assert all(v.syndrome == "comm_slow_link" for v in verdicts)
+            allowed = {r for v in verdicts for r in v.link}
+            assert att is not None
+            assert att.rank_set() <= allowed

@@ -1,0 +1,305 @@
+"""Divergence detection: goldens, recall, and healthy-stream silence.
+
+PR 8 added the train-signal telemetry channel (per-rank loss / grad-norm /
+overflow counters on ``TelemetryWindow.train``) and the Flare-style
+cross-sectional detector (``core/c4d/divergence.py``).  Pinned contracts:
+
+* the **default path is bit-identical to PR 7** — with ``divergence=None``
+  and no train signals attached, streaming action sequences and the
+  silent_pcie / nccl_storm drill reports reproduce the pre-divergence
+  goldens verbatim;
+* **recall** — injected sdc / loss_spike / nan_rank faults are verdicted
+  at the right rank with the right syndrome (>= 0.9 over a seed grid);
+* **precision** — fault-free train streams confirm *nothing* over 200+
+  windows at the shipped operating point (the zero-FP acceptance bar);
+* nan_rank (``divergence_overflow``) acts immediately, without waiting
+  for a confirmation streak, like the hang syndromes.
+"""
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro.core.c4d.divergence import (DIVERGENCE_GRAD, DIVERGENCE_LOSS,
+                                       DIVERGENCE_OVERFLOW,
+                                       DivergenceDetector)
+from repro.core.c4d.master import C4DMaster
+from repro.core.faults import DIVERGENCE_KINDS, Fault, RingJobTelemetry
+
+N_RANKS = 32
+RANKS_PER_NODE = 8
+
+EXPECTED_SYNDROME = {
+    "sdc": DIVERGENCE_GRAD,
+    "loss_spike": DIVERGENCE_LOSS,
+    "nan_rank": DIVERGENCE_OVERFLOW,
+}
+SEVERITY = {"sdc": 5.0, "loss_spike": 12.0, "nan_rank": 2.0}
+
+
+def _analyze(seed, faults, window_id=0):
+    tel = RingJobTelemetry(n_ranks=N_RANKS, seed=seed)
+    train = tel.train_signals(window_id=window_id, faults=faults)
+    return DivergenceDetector().analyze(train)
+
+
+def _stream(seed, fault, fault_from, n_windows):
+    """Stream windows through a divergence-enabled master, attaching train
+    signals the way C4DService does (divergence faults do not perturb the
+    comm matrices)."""
+    tel = RingJobTelemetry(n_ranks=N_RANKS, seed=seed)
+    master = C4DMaster(n_ranks=N_RANKS, ranks_per_node=RANKS_PER_NODE,
+                       divergence=DivergenceDetector())
+    seq = []
+    for w in range(n_windows):
+        faults = [fault] if (fault is not None and w >= fault_from) else []
+        win = tel.window_arrays(
+            window_id=w,
+            faults=[f for f in faults if f.kind not in DIVERGENCE_KINDS])
+        win.train = tel.train_signals(window_id=w, faults=faults)
+        actions = master.ingest(win)
+        seq.append([[a.node_id, a.action,
+                     sorted({v.syndrome for v in a.verdicts})]
+                    for a in actions])
+    return seq
+
+
+# ---------------------------------------------------------------------------
+# PR 7 default-path goldens: divergence off must change nothing.
+
+# streaming comm_hang (n_ranks=32, seed=7, rank=21 from window 3)
+GOLDEN_STREAM_HANG = [
+    [], [], [],
+    [[2, "isolate_restart", ["comm_hang"]]],
+    [[2, "isolate_restart", ["comm_hang"]]],
+    [[2, "isolate_restart", ["comm_hang"]]],
+]
+
+# silent_pcie / nccl_storm seed-0 drill fragments (PR 7 values)
+GOLDEN_SILENT_PCIE = {
+    "restarts": 1,
+    "detection_latencies": [60.0],
+    "localization_hits": 1,
+    "downtime_total_s": 1099.3062074357235,
+    "goodput_fraction": 0.8473185823005939,
+    "streaming_windows": 240,
+    "streaming_detected": 1,
+    "streaming_fp_windows": 9,
+    "streaming_latencies": [30.0],
+}
+GOLDEN_NCCL_STORM = {
+    "restarts": 3,
+    "downtime_total_s": 3074.7504686170296,
+    "goodput_fraction": 0.7864756619015951,
+    "streaming_detected": 3,
+    "streaming_missed": 0,
+}
+
+
+def test_default_hang_stream_pinned_to_pr7():
+    tel = RingJobTelemetry(n_ranks=N_RANKS, seed=7)
+    master = C4DMaster(n_ranks=N_RANKS, ranks_per_node=RANKS_PER_NODE)
+    fault = Fault("comm_hang", rank=21)
+    seq = []
+    for w in range(6):
+        faults = [fault] if w >= 3 else []
+        actions = master.ingest(tel.window_arrays(window_id=w, faults=faults))
+        seq.append([[a.node_id, a.action,
+                     sorted({v.syndrome for v in a.verdicts})]
+                    for a in actions])
+    assert seq == GOLDEN_STREAM_HANG
+
+
+def test_default_drills_pinned_to_pr7():
+    from repro.scenarios import library
+    from repro.scenarios.engine import run_scenario
+
+    rep = run_scenario(library.get("silent_pcie_degradation", seed=0))
+    det, st_ = rep["detection"], rep["streaming"]
+    assert rep["restarts"] == GOLDEN_SILENT_PCIE["restarts"]
+    assert det["latencies_s"] == GOLDEN_SILENT_PCIE["detection_latencies"]
+    assert det["localization_hits"] == GOLDEN_SILENT_PCIE["localization_hits"]
+    np.testing.assert_allclose(rep["downtime"]["total_s"],
+                               GOLDEN_SILENT_PCIE["downtime_total_s"],
+                               rtol=0, atol=0)
+    np.testing.assert_allclose(rep["goodput"]["fraction"],
+                               GOLDEN_SILENT_PCIE["goodput_fraction"],
+                               rtol=0, atol=0)
+    assert st_["windows"] == GOLDEN_SILENT_PCIE["streaming_windows"]
+    assert st_["detected"] == GOLDEN_SILENT_PCIE["streaming_detected"]
+    assert st_["false_positive_windows"] == \
+        GOLDEN_SILENT_PCIE["streaming_fp_windows"]
+    assert st_["latencies_s"] == GOLDEN_SILENT_PCIE["streaming_latencies"]
+
+    rep = run_scenario(library.get("nccl_timeout_storm", seed=0))
+    assert rep["restarts"] == GOLDEN_NCCL_STORM["restarts"]
+    np.testing.assert_allclose(rep["downtime"]["total_s"],
+                               GOLDEN_NCCL_STORM["downtime_total_s"],
+                               rtol=0, atol=0)
+    np.testing.assert_allclose(rep["goodput"]["fraction"],
+                               GOLDEN_NCCL_STORM["goodput_fraction"],
+                               rtol=0, atol=0)
+    assert rep["streaming"]["detected"] == GOLDEN_NCCL_STORM[
+        "streaming_detected"]
+    assert rep["streaming"]["missed"] == GOLDEN_NCCL_STORM["streaming_missed"]
+
+
+# ---------------------------------------------------------------------------
+# Divergence verdict + streaming goldens.
+
+def test_divergence_verdicts_pinned():
+    got = sorted([v.syndrome, v.rank, round(v.score, 6)]
+                 for v in _analyze(3, [Fault("sdc", rank=9, severity=5.0)]))
+    assert got == [["divergence_grad", 9, 73.963586]]
+
+    got = sorted([v.syndrome, v.rank, round(v.score, 6)]
+                 for v in _analyze(5, [Fault("loss_spike", rank=14,
+                                             severity=12.0)]))
+    assert got == [["divergence_loss", 14, 654.224037]]
+
+    got = sorted([v.syndrome, v.rank, round(v.score, 6)]
+                 for v in _analyze(7, [Fault("nan_rank", rank=26,
+                                             severity=2.0)]))
+    assert got == [["divergence_overflow", 26, 2.0]]
+
+
+def test_divergence_stream_actions_pinned():
+    # sdc rank 13 from window 4: graded confirmation -> first action at
+    # window 5, then the every-other-window reprioritized cadence.  The
+    # window-3 comm_slow_link FP is the same one the PR 7 golden carries.
+    got = _stream(7, Fault("sdc", rank=13, severity=5.0), 4, 10)
+    assert got == [
+        [], [], [],
+        [[3, "isolate_restart", ["comm_slow_link"]]],
+        [],
+        [[1, "isolate_restart", ["divergence_grad"]]],
+        [],
+        [[1, "isolate_restart", ["divergence_grad"]]],
+        [],
+        [[1, "isolate_restart", ["divergence_grad"]]],
+    ]
+
+
+def test_nan_rank_acts_immediately():
+    # overflow is in the immediate set: the action fires on the *first*
+    # faulty window (window 3), no confirmation streak.
+    got = _stream(7, Fault("nan_rank", rank=21, severity=2.0), 3, 6)
+    assert got == [
+        [], [], [],
+        [[3, "isolate_restart", ["comm_slow_link"]],
+         [2, "isolate_restart", ["divergence_overflow"]]],
+        [[2, "isolate_restart", ["comm_slow_link", "divergence_overflow"]]],
+        [[2, "isolate_restart", ["divergence_overflow"]]],
+    ]
+
+
+def test_divergence_drill_goldens():
+    from repro.scenarios import library
+    from repro.scenarios.engine import run_scenario
+
+    rep = run_scenario(library.get("silent_data_corruption", seed=0))
+    assert rep["passed"], [c for c in rep["checks"] if not c["ok"]]
+    assert rep["restarts"] == 1
+    assert rep["detection"]["latencies_s"] == [60.0]
+    assert rep["detection"]["localization_hits"] == 1
+    np.testing.assert_allclose(rep["downtime"]["total_s"],
+                               919.3062074357235, rtol=0, atol=0)
+    np.testing.assert_allclose(rep["goodput"]["fraction"],
+                               0.8723185823005939, rtol=0, atol=0)
+    assert rep["streaming"]["by_family"] == {
+        "divergence": {"n_faults": 1, "detected": 1, "missed": 0}}
+
+    rep = run_scenario(library.get("loss_spike_cascade", seed=0))
+    assert rep["passed"], [c for c in rep["checks"] if not c["ok"]]
+    assert rep["restarts"] == 2
+    assert rep["detection"]["latencies_s"] == [60.0, 30.0]
+    assert rep["streaming"]["detected"] == 2
+    assert rep["streaming"]["missed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Recall and precision over grids.
+
+def test_divergence_recall_over_grid():
+    hits, total = 0, 0
+    for seed in range(10):
+        for kind in DIVERGENCE_KINDS:
+            rank = (7 * seed + 2) % N_RANKS
+            verdicts = _analyze(seed, [Fault(kind, rank=rank,
+                                             severity=SEVERITY[kind])])
+            total += 1
+            if any(v.rank == rank and v.syndrome == EXPECTED_SYNDROME[kind]
+                   for v in verdicts):
+                hits += 1
+    assert hits / total >= 0.9, (hits, total)
+
+
+def test_healthy_streams_confirm_nothing():
+    """>= 200 fault-free windows per seed: the divergence detector emits no
+    verdicts and the confirmation pipeline takes no divergence action."""
+    det = DivergenceDetector()
+    for seed in (0, 1, 2):
+        tel = RingJobTelemetry(n_ranks=N_RANKS, seed=seed)
+        master = C4DMaster(n_ranks=N_RANKS, ranks_per_node=RANKS_PER_NODE,
+                           divergence=DivergenceDetector())
+        for w in range(240):
+            train = tel.train_signals(window_id=w)
+            assert det.analyze(train) == [], (seed, w)
+            win = tel.window_arrays(window_id=w)
+            win.train = train
+            for action in master.ingest(win):
+                for v in action.verdicts:
+                    assert not v.syndrome.startswith("divergence"), (seed, w)
+
+
+def test_train_signals_leave_comm_stream_untouched():
+    """Train signals draw from their own RNG stream: consuming them must
+    not shift the comm jitter draws (the PR 7 bit-identity guarantee)."""
+    a = RingJobTelemetry(n_ranks=N_RANKS, seed=11)
+    b = RingJobTelemetry(n_ranks=N_RANKS, seed=11)
+    for w in range(4):
+        b.train_signals(window_id=w)
+    wa = a.window_arrays(window_id=0)
+    wb = b.window_arrays(window_id=0)
+    np.testing.assert_array_equal(wa.tr_end, wb.tr_end)
+    np.testing.assert_array_equal(wa.tr_start, wb.tr_start)
+    np.testing.assert_array_equal(wa.hb_seq, wb.hb_seq)
+
+
+def test_train_signals_loss_decays_and_overflow_counts():
+    tel = RingJobTelemetry(n_ranks=N_RANKS, seed=0)
+    t0 = tel.train_signals(window_id=0)
+    t200 = tel.train_signals(window_id=200)
+    assert float(np.median(t200.loss)) < float(np.median(t0.loss))
+    assert t0.overflow.dtype == np.int64 and not t0.overflow.any()
+
+    t = tel.train_signals(window_id=0,
+                          faults=[Fault("nan_rank", rank=4, severity=3.0)])
+    assert t.overflow[4] == 3 and t.overflow.sum() == 3
+
+
+def test_out_of_range_rank_is_ignored():
+    tel = RingJobTelemetry(n_ranks=N_RANKS, seed=0)
+    t = tel.train_signals(window_id=0,
+                          faults=[Fault("sdc", rank=N_RANKS + 5,
+                                        severity=9.0)])
+    assert DivergenceDetector().analyze(t) == []
+
+
+# ---------------------------------------------------------------------------
+# Property tests (skipped gracefully when hypothesis is absent).
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=200),
+       rank=st.integers(min_value=0, max_value=N_RANKS - 1),
+       severity=st.floats(min_value=4.0, max_value=12.0))
+def test_property_sdc_always_caught_at_rank(seed, rank, severity):
+    verdicts = _analyze(seed, [Fault("sdc", rank=rank, severity=severity)])
+    assert [v.rank for v in verdicts] == [rank]
+    assert verdicts[0].syndrome == DIVERGENCE_GRAD
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=200),
+       window_id=st.integers(min_value=0, max_value=500))
+def test_property_healthy_window_is_silent(seed, window_id):
+    verdicts = _analyze(seed, [], window_id=window_id)
+    assert verdicts == []

@@ -228,3 +228,59 @@ def test_cli_scenario_seed_threaded(tmp_path):
     assert rc == 0
     rep = json.loads((tmp_path / "single_nic_down.json").read_text())
     assert rep["seed"] == 4
+
+
+# ---------------------------------------------------------------------------
+# mixed fault families (PR 8): per-family P/R + attribution in the report
+# ---------------------------------------------------------------------------
+
+def mixed_campaign(seed=0, **over):
+    return CampaignSpec(name="tiny_mixed", seed=seed,
+                        **{**TINY, "faults_per_hour": 1.0,
+                           "divergence_faults_per_hour": 2.0,
+                           "attribution": True,
+                           "compare_fabrics": False, **over})
+
+
+def test_mixed_campaign_samples_both_families():
+    from repro.core.faults import DIVERGENCE_TABLE
+
+    div_classes = {c.name for c in DIVERGENCE_TABLE}
+    spec = mixed_campaign(n_trials=6)
+    fams = set()
+    for i in range(spec.n_trials):
+        trial = sample_trial(spec, i)
+        assert trial.attribution and trial.divergence
+        for ev in trial.events:
+            if isinstance(ev, InjectFault):
+                fams.add("divergence" if ev.error_class in div_classes
+                         else "comm")
+    assert fams == {"comm", "divergence"}
+
+
+def test_mixed_campaign_per_family_keys_and_determinism():
+    a = run_campaign(mixed_campaign(), workers=1).to_json()
+    b = run_campaign(mixed_campaign(), workers=2).to_json()
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+    det = a["aggregates"]["detection"]
+    fams = det["per_family"]
+    assert set(fams) >= {"divergence"}
+    for fam, row in fams.items():
+        assert {"n_faults", "true_positives", "false_positives",
+                "false_negatives", "precision", "recall"} <= set(row), fam
+        assert row["n_faults"] == (row["true_positives"] +
+                                   row["false_positives"] +
+                                   row["false_negatives"])
+    att = det["attribution"]
+    assert {"attempts", "hits", "hit_rate"} <= set(att)
+    if att["attempts"]:
+        assert 0.0 <= att["hit_rate"] <= 1.0
+
+
+def test_fleet_mixed_registered_and_overridable():
+    cam = get("fleet_mixed", n_trials=2, gpus=32)
+    assert cam.divergence_faults_per_hour > 0 and cam.attribution
+    assert cam.n_trials == 2 and cam.gpus == 32
+    cam_off = get("fleet_mixed", attribution=False)
+    assert cam_off.attribution is False

@@ -2,10 +2,12 @@
 
 Two costs bound how far the service architecture scales:
 
-  * **bus throughput** — heap push/pop + priority-ordered delivery per
-    event, measured at 1k / 10k / 100k scheduled events (the fleet_1024
-    campaign pops a few thousand events per trial, so six-figure event
-    counts leave ample headroom);
+  * **bus throughput** — timeline sort/merge + priority-ordered delivery
+    per event, measured at 1k / 10k / 100k / 1M scheduled events (5M in
+    full runs).  The 1M+ rows are the continuous-fleet stress
+    characterization: a ``fleet_month`` horizon delivers millions of
+    events through one kernel, which is what motivated the sort-then-merge
+    drain (docs/runtime.md has the before/after table);
   * **streaming tick** — one always-on C4D monitoring window (vectorized
     telemetry synthesis + master ingest) at 1024 ranks, the per-tick cost
     that motivates the coarser ``streaming_tick_s`` on large campaigns.
@@ -68,7 +70,10 @@ def bench_stream_tick(n_ranks: int, repeats: int) -> None:
 
 
 def run(quick: bool = False) -> None:
-    for n in (1_000, 10_000, 100_000):
+    sizes = (1_000, 10_000, 100_000, 1_000_000)
+    if not quick:
+        sizes += (5_000_000,)
+    for n in sizes:
         bench_bus(n)
     for n_ranks, repeats in ((64, 30), (1024, 5 if quick else 20)):
         bench_stream_tick(n_ranks, repeats)

@@ -15,19 +15,36 @@ Ordering is fully deterministic and independent of registration order:
 
   * heap entries sort by ``(t, lane, seq)`` — time first, then lane
     (scheduled events before ticks at the same instant), then a
-
     monotonically increasing sequence number (FIFO among ties);
   * within a delivery, services run in ``(priority, name)`` order
     (``runtime.service.Service``).
 
-The trace records every delivery (scheduled, published, tick) and is the
-bit-identical artifact the determinism drill compares; see
-docs/runtime.md for the full contract.
+The trace records every delivery (scheduled, published, tick) as a
+``(t, kind, event)`` tuple and is the bit-identical artifact the
+determinism drill compares; see docs/runtime.md for the full contract.
+
+Drain strategy (the 1M+ event stress characterization): the dominant
+costs at high event rates are the per-pop ``heapq`` sift (O(log n) with
+Python-level tuple comparisons) and the per-event delivery fan-out
+(attribute lookups per service per event).  ``drain`` therefore sorts the
+pre-scheduled timeline once (descending, so the next entry pops from the
+tail in O(1)) and routes mid-drain ``schedule`` calls to a small side
+heap, merging the two streams by comparing heads — the pop order is
+provably identical to a pure heap, so the trace stays bit-stable.
+Delivery uses a cached list of bound ``on_event`` handlers rebuilt on
+``register``.  Measured on the 1M-event benchmark this is ~3.5x the
+all-heap baseline (see docs/runtime.md for the table).
+
+Horizon semantics: nothing is ever dropped.  Entries past the horizon
+(including tick re-arms) stay queued, so a run can be split —
+``start(T); drain()`` then ``run_to(2T)`` is bit-identical to
+``start(2T); drain()`` — which is what the continuous fleet layer's
+snapshot/resume and the horizon-splitting property tests rely on.
 """
 from __future__ import annotations
 
 import heapq
-from typing import Any, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -36,6 +53,10 @@ from repro.runtime.service import Service
 
 LANE_EVENT = 0   # scheduled events run before ...
 LANE_TICK = 1    # ... service ticks at the same timestamp
+
+# trace record: (t, kind, event) — kind in {"event", "publish", "tick"};
+# for ticks the event slot holds the service *name* (a str)
+TraceRecord = Tuple[float, str, Any]
 
 
 class EventBus:
@@ -46,10 +67,13 @@ class EventBus:
         self.rng = np.random.default_rng(seed)
         self.seed = seed
         self.services: List[Service] = []
-        self.trace: List[dict] = []
+        self.trace: List[TraceRecord] = []
         self._heap: List[Tuple[float, int, int, Any]] = []
+        self._side: Optional[List[Tuple[float, int, int, Any]]] = None
+        self._handlers: List[Callable[[Any], None]] = []
         self._seq = 0
         self._started = False
+        self._until = 0.0
 
     # ---- composition -------------------------------------------------------
     def register(self, service: Service) -> Service:
@@ -60,6 +84,7 @@ class EventBus:
         self.services.append(service)
         # (priority, name) order — registration order must never matter
         self.services.sort(key=lambda s: (s.priority, s.name))
+        self._handlers = [s.on_event for s in self.services]
         return service
 
     def service(self, name: str) -> Service:
@@ -71,7 +96,8 @@ class EventBus:
     # ---- event channels ----------------------------------------------------
     def _push(self, t: float, lane: int, payload: Any) -> None:
         self._seq += 1
-        heapq.heappush(self._heap, (t, lane, self._seq, payload))
+        target = self._side if self._side is not None else self._heap
+        heapq.heappush(target, (t, lane, self._seq, payload))
 
     def schedule(self, t: float, event: Any) -> None:
         """Timed delivery when the clock reaches ``t``."""
@@ -84,9 +110,9 @@ class EventBus:
         self._deliver(event, kind="publish")
 
     def _deliver(self, event: Any, kind: str) -> None:
-        self.trace.append({"t": self.clock.now, "kind": kind, "event": event})
-        for svc in self.services:
-            svc.on_event(event)
+        self.trace.append((self.clock.now, kind, event))
+        for handler in self._handlers:
+            handler(event)
 
     # ---- run loop ----------------------------------------------------------
     def start(self, until: float) -> None:
@@ -98,31 +124,80 @@ class EventBus:
         for svc in self.services:
             svc.on_start(self)
         for svc in self.services:
+            # armed regardless of the horizon: a first tick past ``until``
+            # simply waits in the queue until a later run_to() reaches it
             if svc.tick_period_s > 0:
-                first = self.clock.now + svc.tick_period_s
-                if first <= until:
-                    self._push(first, LANE_TICK, svc)
+                self._push(self.clock.now + svc.tick_period_s, LANE_TICK, svc)
 
     def drain(self) -> None:
-        """Pop until the heap is empty or the horizon is crossed; anything
-        scheduled past the horizon (e.g. a restart completing after the
-        scenario ends) is dropped, matching the engine's historic
-        semantics."""
+        """Deliver everything up to the horizon; leave the rest queued.
+
+        The pre-scheduled timeline is sorted once (descending — the next
+        entry is ``timeline[-1]``, an O(1) ``pop``); anything pushed while
+        draining (publish cascades, tick re-arms, service schedules) lands
+        on a side heap and is merged in by head comparison.  ``(t, lane,
+        seq)`` entries are unique, so the merge order equals the pure-heap
+        pop order exactly.  The first entry past the horizon is *peeked*,
+        never popped — a later ``run_to`` resumes with nothing lost.
+        """
         until = self._until
-        while self._heap:
-            t, lane, _, payload = heapq.heappop(self._heap)
-            if t > until:
-                break
-            self.clock.advance(t)
-            if lane == LANE_TICK:
-                svc = payload
-                self.trace.append({"t": t, "kind": "tick", "event": svc.name})
-                svc.on_tick(t)
-                nxt = t + svc.tick_period_s
-                if svc.tick_period_s > 0 and nxt <= until:
-                    self._push(nxt, LANE_TICK, svc)
-            else:
-                self._deliver(payload, kind="event")
+        timeline = self._heap
+        timeline.sort(reverse=True)
+        side: List[Tuple[float, int, int, Any]] = []
+        self._side = side            # reroute _push while draining
+        clock = self.clock
+        trace = self.trace
+        handlers = self._handlers
+        pop_side = heapq.heappop
+        try:
+            while True:
+                if side and (not timeline or side[0] < timeline[-1]):
+                    entry = side[0]
+                    if entry[0] > until:
+                        break
+                    pop_side(side)
+                elif timeline:
+                    entry = timeline[-1]
+                    if entry[0] > until:
+                        break
+                    timeline.pop()
+                else:
+                    break
+                t, lane, _, payload = entry
+                clock.now = t        # monotone by merge order; skip advance()
+                if lane == LANE_TICK:
+                    svc = payload
+                    trace.append((t, "tick", svc.name))
+                    svc.on_tick(t)
+                    if svc.tick_period_s > 0:
+                        self._push(t + svc.tick_period_s, LANE_TICK, svc)
+                else:
+                    trace.append((t, "event", payload))
+                    for handler in handlers:
+                        handler(payload)
+        finally:
+            # restore one valid ascending heap for pause/resume callers
+            self._side = None
+            timeline.reverse()
+            if side:
+                timeline.extend(side)
+                heapq.heapify(timeline)
+
+    def run_to(self, t: float) -> None:
+        """Extend the horizon to ``t`` and drain up to it (incremental run).
+
+        Splitting a run at any point is bit-identical to running it in one
+        go: ``start(T); drain(); run_to(2T)`` equals ``start(2T); drain()``
+        because past-horizon entries are retained and tick trains are armed
+        independent of the horizon.  The continuous fleet layer steps its
+        kernel with this between rolling reports.
+        """
+        if not self._started:
+            raise RuntimeError("run_to() before start()")
+        if t < self._until:
+            raise ValueError(f"cannot shrink the horizon: {t} < {self._until}")
+        self._until = t
+        self.drain()
 
     def stop(self) -> None:
         """Advance to the horizon and run ``on_stop`` in service order."""
@@ -144,8 +219,7 @@ class EventBus:
         rate result) define ``trace_label`` to keep the trace compact while
         staying bit-stable."""
         out = []
-        for rec in self.trace:
-            ev = rec["event"]
+        for t, kind, ev in self.trace:
             label = getattr(ev, "trace_label", None) or repr(ev)
-            out.append(f"{rec['t']:.6f} {rec['kind']} {label}")
+            out.append(f"{t:.6f} {kind} {label}")
         return out

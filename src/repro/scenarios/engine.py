@@ -59,11 +59,11 @@ class CampaignEngine:
 
     # ------------------------------------------------------------------
     def _timeline(self) -> List[dict]:
-        return [{"t": rec["t"], "type": type(rec["event"]).__name__,
+        return [{"t": t, "type": type(ev).__name__,
                  **{k: (list(v) if isinstance(v, tuple) else v)
-                    for k, v in rec["event"].__dict__.items() if k != "t"}}
-                for rec in self.kernel.trace
-                if rec["kind"] == "event" and isinstance(rec["event"], Event)]
+                    for k, v in ev.__dict__.items() if k != "t"}}
+                for t, kind, ev in self.kernel.trace
+                if kind == "event" and isinstance(ev, Event)]
 
     def _report(self) -> dict:
         spec = self.spec

@@ -13,6 +13,12 @@ Monte Carlo campaigns (randomized trial populations, docs/campaigns.md):
     PYTHONPATH=src python -m repro.scenarios.run --campaign fleet_1024 \
         --trials 64 --gpus 1024 --workers 4 --json reports/ --md reports/
 
+Continuous fleets (live multi-tenant simulation, docs/fleet.md):
+
+    PYTHONPATH=src python -m repro.scenarios.run --fleet fleet_hour
+    PYTHONPATH=src python -m repro.scenarios.run --fleet fleet_day \
+        --json reports/ --md reports/
+
 ROC sweeps (paired operating-point grids, docs/detection.md "Precision"):
 
     PYTHONPATH=src python -m repro.scenarios.run --sweep roc_smoke
@@ -47,7 +53,7 @@ import sys
 import time
 from typing import List
 
-from repro.scenarios import library, montecarlo, precision
+from repro.scenarios import fleet, library, montecarlo, precision
 from repro.scenarios.engine import run_scenario
 
 
@@ -143,6 +149,9 @@ def main(argv=None) -> int:
                     help="Monte Carlo campaign name (repeatable)")
     ap.add_argument("--sweep", action="append", default=[],
                     help="ROC operating-point sweep name (repeatable)")
+    ap.add_argument("--fleet", action="append", default=[],
+                    help="continuous fleet simulation name (repeatable; "
+                         "docs/fleet.md)")
     ap.add_argument("--operating-point", default=None, metavar="SPEC",
                     help="apply a detection operating point to scenarios "
                          "and campaigns, e.g. 'mad=6,streak=3,hl=16' "
@@ -193,12 +202,16 @@ def main(argv=None) -> int:
             sw = precision.get(name)
             print(f"{name:28s} [sweep: {sw.n_trials} trials x "
                   f"{len(sw.grid())} points] {sw.paper_ref}")
+        for name in fleet.names():
+            fs = fleet.get(name)
+            print(f"{name:28s} [fleet: {fs.duration_s / 3600.0:.0f} h x "
+                  f"{fs.gpus} GPUs] {fs.paper_ref}")
         return 0
 
     targets = library.names() if args.all else args.scenario
-    if not targets and not args.campaign and not args.sweep:
+    if not targets and not args.campaign and not args.sweep and not args.fleet:
         ap.error("nothing to do: pass --list, --scenario NAME, "
-                 "--campaign NAME, --sweep NAME, or --all")
+                 "--campaign NAME, --sweep NAME, --fleet NAME, or --all")
 
     op = None
     if args.operating_point:
@@ -255,6 +268,24 @@ def main(argv=None) -> int:
             _write_json(report.to_json(), args.json, cam.name)
         if args.md:
             _write_text(report.to_markdown(), args.md, cam.name)
+
+    for name in args.fleet:
+        fs = fleet.get(name, seed=args.seed, gpus=args.gpus,
+                       operating_point=op, backend=args.backend,
+                       attribution=True if args.attribution else None)
+        t0 = time.perf_counter()
+        frep = fleet.run_fleet(fs, workers=max(args.workers, 1))
+        wall = time.perf_counter() - t0
+        if args.json != "-" and args.md != "-":
+            for line in frep.summary_lines():
+                print(line)
+            print(f"wall          : {wall:.1f} s "
+                  f"({len(frep.rolling)} rolling segments)")
+            print()
+        if args.json:
+            _write_json(frep.to_json(), args.json, fs.name)
+        if args.md:
+            _write_text(frep.to_markdown(), args.md, fs.name)
 
     for name in args.sweep:
         sw = precision.get(name, seed=args.seed, n_trials=args.trials)

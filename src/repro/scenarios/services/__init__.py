@@ -9,11 +9,15 @@ The campaign engine's layers, re-homed as independent services sharing a
     re-planning, busbw-changed events;
   * ``C4DService`` (priority 20) — per-fault reference detection and the
     always-on streaming detector;
-  * ``TrainerService`` (priority 30) — the real-Trainer replay wiring.
+  * ``TrainerService`` (priority 30) — the real-Trainer replay wiring;
+  * ``FleetService`` (priority 5) — the continuous multi-tenant control
+    plane: live tenant/fault/flap processes, per-tenant SLO accounting,
+    rolling reports (docs/fleet.md).
 """
 from repro.scenarios.services.c4d_service import C4DService
 from repro.scenarios.services.context import JobRun, RunContext
 from repro.scenarios.services.downtime_service import DowntimeService
+from repro.scenarios.services.fleet_service import FleetService, ProcessDue
 from repro.scenarios.services.events import (BusbwChanged, FabricTransient,
                                              FaultDetected, JobAdmitted,
                                              JobResumed, LinkObserved,
@@ -24,6 +28,7 @@ from repro.scenarios.services.trainer_service import TrainerService
 __all__ = [
     "RunContext", "JobRun",
     "DowntimeService", "FabricService", "C4DService", "TrainerService",
+    "FleetService", "ProcessDue",
     "JobAdmitted", "RestartComplete", "JobResumed", "FaultDetected",
     "FabricTransient", "LinkObserved", "BusbwChanged", "admitted_spec",
 ]

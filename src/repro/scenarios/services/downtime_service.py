@@ -61,6 +61,14 @@ class DowntimeService(Service):
     def on_stop(self) -> None:
         self._integrate(self.kernel.clock.now)       # horizon
 
+    def integrate_to(self, to_t: float) -> None:
+        """Public piecewise-integration hook for observers that need exact
+        progress at a non-event instant.  The fleet's rolling-report tick
+        calls this so segment goodput is measured *at* the boundary;
+        splitting an interval is deterministic, and the batch engine never
+        calls it — historical reports stay bit-identical."""
+        self._integrate(to_t)
+
     # ------------------------------------------------------------------
     # goodput integral (piecewise between events; exact, tick-free)
     # ------------------------------------------------------------------

@@ -171,6 +171,98 @@ class ScenarioSpec:
         return [j for j in self.jobs if j.focus]
 
 
+# ---------------------------------------------------------------------------
+# Continuous fleet
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """One continuous multi-tenant fleet simulation (docs/fleet.md).
+
+    Where a ``CampaignSpec`` freezes its tenant count per trial, a fleet
+    runs *one* long-horizon kernel with tenant arrival/departure as a live
+    seeded Poisson process, faults and link flaps as live processes on the
+    same clock, one persistent global C4P master doing admission +
+    placement, per-tenant SLO accounting, and rolling campaign reports
+    emitted every ``report_period_s`` while the fleet runs
+    (``repro.scenarios.fleet``).
+    """
+    name: str
+    description: str = ""
+    paper_ref: str = ""
+    seed: int = 0
+    duration_s: float = 86400.0               # the "month in a day" horizon
+
+    # fleet scale: the anchor job is the flagship tenant — one ring over
+    # every host, one telemetry rank per simulated GPU (paper §3.1)
+    gpus: int = 10240
+    ranks_per_node: int = 8
+    n_hosts: int = 64
+    oversubscription: float = 1.0
+    fabric: str = "c4p"
+    qps_per_port: int = 2
+
+    # live tenant process: Poisson arrivals, uniform lifetimes, small jobs
+    # placed on the least-loaded hosts by the persistent C4P master
+    tenant_arrivals_per_hour: float = 1.0
+    tenant_lifetime_s: Tuple[float, float] = (1800.0, 14400.0)
+    tenant_hosts_choices: Tuple[int, ...] = (2, 4)
+    max_jobs_per_host: int = 3                # admission control ceiling
+
+    # live fault/flap populations (Table-1 mix; Fig. 11 fabric events)
+    faults_per_hour: float = 0.5
+    divergence_faults_per_hour: float = 0.0
+    tenant_fault_fraction: float = 0.25       # faults landing on tenants
+    link_flaps_per_hour: float = 0.25
+    flap_outage_s: Tuple[float, float] = (300.0, 1800.0)
+
+    # detection / accounting knobs forwarded to the anchor scenario
+    checkpoint_period_s: float = 600.0
+    apply_localization_ceiling: bool = True
+    streaming_tick_s: float = 900.0
+    operating_point: Optional[OperatingPoint] = None
+    backend: Optional[str] = None
+    attribution: bool = False
+
+    # per-tenant SLO accounting (docs/fleet.md "SLO semantics")
+    slo_goodput_floor_frac: float = 0.5       # busbw >= floor * healthy
+    slo_mttr_budget_s: float = 1800.0         # per-fault repair budget
+
+    # rolling report cadence (also the fleet service's tick period)
+    report_period_s: float = 7200.0
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def scenario_spec(self) -> "ScenarioSpec":
+        """The anchor ``ScenarioSpec`` the fleet kernel is built from: the
+        flagship job over every host, an *empty* event script — every
+        fault, flap, and tenant is generated live by ``FleetService``."""
+        return ScenarioSpec(
+            name=f"{self.name}_anchor",
+            description=f"continuous fleet anchor for {self.name}",
+            paper_ref=self.paper_ref,
+            seed=self.seed,
+            duration_s=self.duration_s,
+            n_hosts=self.n_hosts,
+            oversubscription=self.oversubscription,
+            fabric=self.fabric,
+            qps_per_port=self.qps_per_port,
+            n_nodes=max(self.gpus // self.ranks_per_node, 2),
+            telemetry_ranks=self.gpus,
+            ranks_per_node=self.ranks_per_node,
+            checkpoint_period_s=self.checkpoint_period_s,
+            apply_localization_ceiling=self.apply_localization_ceiling,
+            streaming_tick_s=self.streaming_tick_s,
+            operating_point=self.operating_point,
+            backend=self.backend,
+            attribution=self.attribution,
+            divergence=self.divergence_faults_per_hour > 0,
+            jobs=(JobSpec(0, tuple(range(self.n_hosts))),),
+            events=(),
+        )
+
+
 def two_host_jobs(n_jobs: int = 8, stride: int = 8) -> Tuple[JobSpec, ...]:
     """The paper's Fig. 9/11 layout: 8 concurrent 2-server jobs crossing the
     spines (job j on hosts [j, j+stride])."""

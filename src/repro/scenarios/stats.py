@@ -254,148 +254,214 @@ def _claim(measured: dict, paper_lo: float, paper_hi: float) -> dict:
             "brackets_paper": bool(ok)}
 
 
+class RollingAggregator:
+    """Incremental campaign aggregation: feed trial records one at a time.
+
+    ``add`` folds one per-trial record (a ``trial_metrics`` dict — or a
+    fleet *segment* record, which has the same shape) into running
+    counters and value lists; ``result`` renders the same aggregate dict
+    at any point.  ``aggregate(trials)`` is implemented on top of this
+    class, so the rolling reports the continuous fleet emits mid-run and
+    the batch campaign reports share one code path by construction:
+    feeding the same records in the same order yields bit-identical
+    aggregates, whether ``result`` is called once at the end or after
+    every ``add``.
+    """
+
+    def __init__(self):
+        self.n_trials = 0
+        # detection counters
+        self._tp = self._fp = self._fn = self._n_faults = 0
+        self._net_ev = self._net_obs = self._net_hit = 0
+        self._att_attempts = self._att_hits = 0
+        self._fam_totals: dict = {}
+        # streaming counters
+        self._s_det = self._s_miss = self._s_ffw = self._s_fpw = 0
+        self._s_susp = self._s_fsusp = self._s_replans = 0
+        # value lists (appended in add-order, so percentiles/CIs match a
+        # batch fold over the same records exactly)
+        self._lat: List[float] = []
+        self._mttr: List[float] = []
+        self._base_mttr: List[float] = []
+        self._s_lat: List[float] = []
+        self._trial_cuts: List = []       # aligned with adds; None = no faults
+        self._gains: List[float] = []
+        self._eff_gains: List[float] = []
+        self._goodput_fracs: List[float] = []
+        self._downtime_fracs: List[float] = []
+
+    def add(self, t: dict) -> None:
+        """Fold one trial (or fleet-segment) record into the aggregate."""
+        self.n_trials += 1
+        self._tp += t["true_positives"]
+        self._fp += t["false_positives"]
+        self._fn += t["false_negatives"]
+        self._n_faults += t["n_faults"]
+        self._lat.extend(t["detection_latencies_s"])
+        self._mttr.extend(t["mttr_s"])
+        self._base_mttr.extend(t["baseline_mttr_s"])
+        self._net_ev += t["network_events"]
+        self._net_obs += t["network_observed"]
+        self._net_hit += t["network_edge_hits"]
+
+        # per-family P/R: the same TP/FP/FN convention, split by detector
+        # vertical (comm vs divergence), summed across trials
+        for fam, c in t.get("by_family", {}).items():
+            agg = self._fam_totals.setdefault(fam, {"n_faults": 0,
+                                                    "true_positives": 0,
+                                                    "false_positives": 0,
+                                                    "false_negatives": 0})
+            for k in agg:
+                agg[k] += c[k]
+        self._att_attempts += t.get("attribution_attempts", 0)
+        self._att_hits += t.get("attribution_hits", 0)
+
+        self._s_lat.extend(t.get("streaming_latencies_s", []))
+        self._s_det += t.get("streaming_detected", 0)
+        self._s_miss += t.get("streaming_missed", 0)
+        self._s_ffw += t.get("streaming_fault_free_windows", 0)
+        self._s_fpw += t.get("streaming_fp_windows", 0)
+        self._s_susp += t.get("streaming_suspect_windows", 0)
+        self._s_fsusp += t.get("streaming_false_suspect_windows", 0)
+        self._s_replans += t.get("streaming_suspect_replans", 0)
+
+        # per-trial overhead cut (None when the trial saw no faults) and,
+        # for A/B trials, the composite efficiency contribution
+        if t["mttr_s"]:
+            c = (C4D_DEC23.errors_per_month
+                 * float(np.mean(t["mttr_s"])) / MONTH_S)
+            b = (BASELINE_JUN23.errors_per_month
+                 * float(np.mean(t["baseline_mttr_s"])) / MONTH_S)
+            cut = 100.0 * (min(b, 1.0) - min(c, 1.0))
+        else:
+            cut = None
+        self._trial_cuts.append(cut)
+        if "ab_gain_pct" in t:
+            self._gains.append(t["ab_gain_pct"])
+            self._eff_gains.append((cut or 0.0) + comm_cut_pct(t["ab_gain_pct"]))
+
+        self._goodput_fracs.append(t["goodput_frac"])
+        self._downtime_fracs.append(t["downtime_frac"])
+
+    def result(self) -> dict:
+        """Render the aggregate dict from everything added so far.
+
+        Returns the detection-quality block (precision/recall/latency),
+        the MTTR distributions, goodput/downtime CIs, and the three
+        paper-claim brackets (error-overhead cut in percentage points of
+        wall time, comm cost cut, composite efficiency gain)."""
+        tp, fp, fn = self._tp, self._fp, self._fn
+        n_faults = self._n_faults
+        per_family = {}
+        for fam in sorted(self._fam_totals):
+            c = self._fam_totals[fam]
+            ftp, ffp = c["true_positives"], c["false_positives"]
+            per_family[fam] = {
+                **c,
+                "precision": ftp / (ftp + ffp) if (ftp + ffp) else 1.0,
+                "recall": ftp / c["n_faults"] if c["n_faults"] else 1.0,
+            }
+
+        # precision = TP/(TP+FP); recall = TP/(TP+FP+FN).  A mislocalized
+        # action is an FP *and* a miss of the true fault, so it sits in the
+        # denominator of both; TP+FP+FN always equals the injected-fault
+        # count.
+        detection = {
+            "n_faults": n_faults,
+            "true_positives": tp, "false_positives": fp,
+            "false_negatives": fn,
+            "precision": tp / (tp + fp) if (tp + fp) else 1.0,
+            "recall": tp / (tp + fp + fn) if n_faults else 1.0,
+            "per_family": per_family,
+            "attribution": {
+                "attempts": self._att_attempts,
+                "hits": self._att_hits,
+                "hit_rate": (self._att_hits / self._att_attempts
+                             if self._att_attempts else None),
+            },
+            "latency_s": percentiles(self._lat),
+            "network_events": self._net_ev,
+            "network_observed_rate":
+                self._net_obs / self._net_ev if self._net_ev else None,
+            "network_edge_hit_rate":
+                self._net_hit / self._net_ev if self._net_ev else None,
+        }
+
+        # -- always-on streaming C4D: latency *measured on the clock* (fault
+        #    onset -> master action, including the onset-to-window-boundary
+        #    phase the per-fault harness cannot see) and the fault-free
+        #    false-positive rate of the persistent detector
+        s_det, s_miss, s_ffw = self._s_det, self._s_miss, self._s_ffw
+        streaming = {
+            "latency_s": percentiles(self._s_lat),
+            "detected": s_det, "missed": s_miss,
+            "online_recall":
+                s_det / (s_det + s_miss) if (s_det + s_miss) else None,
+            "fault_free_windows": s_ffw,
+            "false_positive_windows": self._s_fpw,
+            "fault_free_fp_rate": self._s_fpw / s_ffw if s_ffw else None,
+            "suspect_windows": self._s_susp,
+            "false_suspect_windows": self._s_fsusp,
+            "false_suspect_rate": self._s_fsusp / s_ffw if s_ffw else None,
+            "suspect_replans": self._s_replans,
+        }
+
+        # -- error-induced overhead: measured C4D downtime vs the no-C4D
+        #    counterfactual, extrapolated to the paper's month at Table-3
+        #    rates
+        mttr, base_mttr = self._mttr, self._base_mttr
+        mttr_mean = float(np.mean(mttr)) if mttr else 0.0
+        base_mean = float(np.mean(base_mttr)) if base_mttr else 0.0
+        overhead_cuts = [c for c in self._trial_cuts if c is not None]
+        overhead = {
+            "mttr_s": percentiles(mttr),
+            "baseline_mttr_s": percentiles(base_mttr),
+            "per_fault_cut_frac":
+                1.0 - mttr_mean / base_mean if base_mean else None,
+            "c4d_month_overhead_frac":
+                C4D_DEC23.errors_per_month * mttr_mean / MONTH_S,
+            "baseline_month_overhead_frac":
+                BASELINE_JUN23.errors_per_month * base_mean / MONTH_S,
+            "cut_pct_points": _claim(mean_ci(overhead_cuts),
+                                     PAPER_ERROR_OVERHEAD_CUT_PCT_POINTS * 0.5,
+                                     PAPER_ERROR_OVERHEAD_CUT_PCT_POINTS * 1.5),
+        }
+
+        # -- communication cost: C4P-vs-ECMP A/B arms (identical drills).
+        #    The busbw gain g shortens the communication phase by g/(1+g);
+        #    scaled by the comm share of iteration time it becomes the
+        #    step-time cost cut the abstract quotes as "15 %".
+        comm = {
+            "ab_gain_pct": mean_ci(self._gains),
+            "comm_time_fraction": COMM_TIME_FRACTION,
+            "cost_cut_pct": _claim(
+                mean_ci([comm_cut_pct(g) for g in self._gains]),
+                PAPER_COMM_COST_CUT_PCT * 0.5,
+                PAPER_COMM_COST_CUT_PCT * 1.5),
+        }
+
+        # -- composite efficiency, the abstract's additive framing:
+        #    percentage points of wall time recovered from error overhead
+        #    plus percentage points of step time recovered from
+        #    communication
+        efficiency = {
+            "goodput_frac": mean_ci(self._goodput_fracs),
+            "downtime_frac": mean_ci(self._downtime_fracs),
+            "gain_pct": _claim(mean_ci(self._eff_gains),
+                               *PAPER_EFFICIENCY_GAIN_PCT),
+        }
+        return {"detection": detection, "streaming": streaming,
+                "overhead": overhead, "communication": comm,
+                "efficiency": efficiency}
+
+
 def aggregate(trials: List[dict]) -> dict:
     """Fold per-trial records into the campaign's fleet statistics.
 
-    Returns the detection-quality block (precision/recall/latency), the
-    MTTR distributions, goodput/downtime CIs, and the three paper-claim
-    brackets (error-overhead cut in percentage points of wall time, comm
-    cost cut, composite efficiency gain)."""
-    tp = sum(t["true_positives"] for t in trials)
-    fp = sum(t["false_positives"] for t in trials)
-    fn = sum(t["false_negatives"] for t in trials)
-    n_faults = sum(t["n_faults"] for t in trials)
-    lat = [x for t in trials for x in t["detection_latencies_s"]]
-    mttr = [x for t in trials for x in t["mttr_s"]]
-    base_mttr = [x for t in trials for x in t["baseline_mttr_s"]]
-    net_ev = sum(t["network_events"] for t in trials)
-    net_obs = sum(t["network_observed"] for t in trials)
-    net_hit = sum(t["network_edge_hits"] for t in trials)
-
-    # per-family P/R: the same TP/FP/FN convention, split by detector
-    # vertical (comm vs divergence), summed across trials
-    fam_totals: dict = {}
+    Batch entry point, implemented on ``RollingAggregator`` so the
+    incremental path the continuous fleet uses and this one cannot
+    diverge."""
+    agg = RollingAggregator()
     for t in trials:
-        for fam, c in t.get("by_family", {}).items():
-            agg = fam_totals.setdefault(fam, {"n_faults": 0,
-                                              "true_positives": 0,
-                                              "false_positives": 0,
-                                              "false_negatives": 0})
-            for k in agg:
-                agg[k] += c[k]
-    per_family = {}
-    for fam in sorted(fam_totals):
-        c = fam_totals[fam]
-        ftp, ffp = c["true_positives"], c["false_positives"]
-        per_family[fam] = {
-            **c,
-            "precision": ftp / (ftp + ffp) if (ftp + ffp) else 1.0,
-            "recall": ftp / c["n_faults"] if c["n_faults"] else 1.0,
-        }
-    att_attempts = sum(t.get("attribution_attempts", 0) for t in trials)
-    att_hits = sum(t.get("attribution_hits", 0) for t in trials)
-
-    # precision = TP/(TP+FP); recall = TP/(TP+FP+FN).  A mislocalized
-    # action is an FP *and* a miss of the true fault, so it sits in the
-    # denominator of both; TP+FP+FN always equals the injected-fault count.
-    detection = {
-        "n_faults": n_faults,
-        "true_positives": tp, "false_positives": fp, "false_negatives": fn,
-        "precision": tp / (tp + fp) if (tp + fp) else 1.0,
-        "recall": tp / (tp + fp + fn) if n_faults else 1.0,
-        "per_family": per_family,
-        "attribution": {
-            "attempts": att_attempts,
-            "hits": att_hits,
-            "hit_rate": att_hits / att_attempts if att_attempts else None,
-        },
-        "latency_s": percentiles(lat),
-        "network_events": net_ev,
-        "network_observed_rate": net_obs / net_ev if net_ev else None,
-        "network_edge_hit_rate": net_hit / net_ev if net_ev else None,
-    }
-
-    # -- always-on streaming C4D: latency *measured on the clock* (fault
-    #    onset -> master action, including the onset-to-window-boundary
-    #    phase the per-fault harness cannot see) and the fault-free
-    #    false-positive rate of the persistent detector
-    s_lat = [x for t in trials for x in t.get("streaming_latencies_s", [])]
-    s_det = sum(t.get("streaming_detected", 0) for t in trials)
-    s_miss = sum(t.get("streaming_missed", 0) for t in trials)
-    s_ffw = sum(t.get("streaming_fault_free_windows", 0) for t in trials)
-    s_fpw = sum(t.get("streaming_fp_windows", 0) for t in trials)
-    s_susp = sum(t.get("streaming_suspect_windows", 0) for t in trials)
-    s_fsusp = sum(t.get("streaming_false_suspect_windows", 0) for t in trials)
-    s_replans = sum(t.get("streaming_suspect_replans", 0) for t in trials)
-    streaming = {
-        "latency_s": percentiles(s_lat),
-        "detected": s_det, "missed": s_miss,
-        "online_recall": s_det / (s_det + s_miss) if (s_det + s_miss) else None,
-        "fault_free_windows": s_ffw,
-        "false_positive_windows": s_fpw,
-        "fault_free_fp_rate": s_fpw / s_ffw if s_ffw else None,
-        "suspect_windows": s_susp,
-        "false_suspect_windows": s_fsusp,
-        "false_suspect_rate": s_fsusp / s_ffw if s_ffw else None,
-        "suspect_replans": s_replans,
-    }
-
-    # -- error-induced overhead: measured C4D downtime vs the no-C4D
-    #    counterfactual, extrapolated to the paper's month at Table-3 rates
-    mttr_mean = float(np.mean(mttr)) if mttr else 0.0
-    base_mean = float(np.mean(base_mttr)) if base_mttr else 0.0
-    c4d_month_frac = C4D_DEC23.errors_per_month * mttr_mean / MONTH_S
-    base_month_frac = BASELINE_JUN23.errors_per_month * base_mean / MONTH_S
-    trial_cuts: List = []          # aligned with trials; None = no faults
-    for t in trials:
-        if not t["mttr_s"]:
-            trial_cuts.append(None)
-            continue
-        c = C4D_DEC23.errors_per_month * float(np.mean(t["mttr_s"])) / MONTH_S
-        b = (BASELINE_JUN23.errors_per_month
-             * float(np.mean(t["baseline_mttr_s"])) / MONTH_S)
-        trial_cuts.append(100.0 * (min(b, 1.0) - min(c, 1.0)))
-    overhead_cuts = [c for c in trial_cuts if c is not None]
-    overhead = {
-        "mttr_s": percentiles(mttr),
-        "baseline_mttr_s": percentiles(base_mttr),
-        "per_fault_cut_frac":
-            1.0 - mttr_mean / base_mean if base_mean else None,
-        "c4d_month_overhead_frac": c4d_month_frac,
-        "baseline_month_overhead_frac": base_month_frac,
-        "cut_pct_points": _claim(mean_ci(overhead_cuts),
-                                 PAPER_ERROR_OVERHEAD_CUT_PCT_POINTS * 0.5,
-                                 PAPER_ERROR_OVERHEAD_CUT_PCT_POINTS * 1.5),
-    }
-
-    # -- communication cost: C4P-vs-ECMP A/B arms (identical drills).  The
-    #    busbw gain g shortens the communication phase by g/(1+g); scaled
-    #    by the comm share of iteration time it becomes the step-time cost
-    #    cut the abstract quotes as "15 %".
-    gains = [t["ab_gain_pct"] for t in trials if "ab_gain_pct" in t]
-    comm_cuts = [comm_cut_pct(g) for g in gains]
-    comm = {
-        "ab_gain_pct": mean_ci(gains),
-        "comm_time_fraction": COMM_TIME_FRACTION,
-        "cost_cut_pct": _claim(mean_ci(comm_cuts),
-                               PAPER_COMM_COST_CUT_PCT * 0.5,
-                               PAPER_COMM_COST_CUT_PCT * 1.5),
-    }
-
-    # -- composite efficiency, the abstract's additive framing: percentage
-    #    points of wall time recovered from error overhead plus percentage
-    #    points of step time recovered from communication
-    eff_gains = []
-    for t, cut in zip(trials, trial_cuts):
-        if "ab_gain_pct" not in t:
-            continue
-        eff_gains.append((cut or 0.0) + comm_cut_pct(t["ab_gain_pct"]))
-    efficiency = {
-        "goodput_frac": mean_ci([t["goodput_frac"] for t in trials]),
-        "downtime_frac": mean_ci([t["downtime_frac"] for t in trials]),
-        "gain_pct": _claim(mean_ci(eff_gains),
-                           *PAPER_EFFICIENCY_GAIN_PCT),
-    }
-    return {"detection": detection, "streaming": streaming,
-            "overhead": overhead, "communication": comm,
-            "efficiency": efficiency}
+        agg.add(t)
+    return agg.result()

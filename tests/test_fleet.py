@@ -1,0 +1,206 @@
+"""Continuous fleet layer: determinism, SLO accounting, goldens (PR 9).
+
+Three families of regression:
+
+  * **pre-PR goldens** — every shipped drill report and the 2-trial
+    fleet_smoke/fleet_mixed campaign reports hash to the exact values
+    recorded *before* the kernel drain rewrite and the rolling-aggregation
+    refactor landed: the batch path is bit-frozen.
+  * **fleet invariants** — same seed -> bit-identical rolling and final
+    reports across repeat runs and worker counts; a mid-run
+    snapshot/resume (``copy.deepcopy`` of the live ``FleetRun``) finishing
+    to the same report as the uninterrupted run; rolling-final aggregates
+    equal to ``stats.aggregate`` over the same segment records (shared
+    code path); SLO cumulative totals equal to the fold of the per-segment
+    values — drift exactly 0.0, the CI fleet-smoke contract.
+  * **tier-2 pacing** — a 1024-rank fleet burns less wall time than the
+    virtual time it simulates, i.e. the fleet tick stays under the
+    streaming cadence.
+"""
+import copy
+import hashlib
+import json
+import time
+
+import pytest
+
+from repro.scenarios import fleet, library, montecarlo
+from repro.scenarios.engine import run_scenario
+from repro.scenarios.stats import aggregate
+
+# sha256 of the canonical JSON of each drill report, recorded at the
+# pre-PR 9 tree (seed-pinned; any byte of drift in the batch path fails)
+DRILL_GOLDENS = {
+    "cascading_spine_flaps":
+        "1af9d45487eec2f40b705cd91ebf2baaae86a7f779c5aa1015c93f064fb61ffa",
+    "degraded_pcie_attribution":
+        "4ae9937198c92e2e33292623341fd9c5d928ce9e5875e4f7e4dfdd443364c344",
+    "ecmp_vs_c4p_ab":
+        "7f1404e5c68a60f24dfe100e85269c963f7908a1f7b742a30aa2cb4fefc72582",
+    "fault_during_restart":
+        "354e8766d92d1f4b0ae69782ea12ac743113235fad72dc4c34753a18f4929ce1",
+    "loss_spike_cascade":
+        "3c71db2f9197fa33c7438afe53b131b373555b2c3388c82340cbbe8a5936366a",
+    "multijob_contention":
+        "538ee2ea99487331bcd78b6d7c2ce3ae5aad68409b86fbdb0bfb4c740e14ea88",
+    "nccl_timeout_storm":
+        "48d0537d7ba0ada05d63ed22d54ace328a20d102bbf8a7e5a28762ee8dca2e31",
+    "silent_data_corruption":
+        "a3b8f49edc5074eb6cf9229f9874f0de7783ca5995cdc28cb715dbc844ba345f",
+    "silent_pcie_degradation":
+        "bf568cceb0b66c950f8f545b971201a9fe85801fe3f6176c47a3868cc6440051",
+    "single_nic_down":
+        "44e8911aec6330aacda625f034276e5d38b3b5e638cc51ea24dbc4d89e746dd2",
+    "straggler_gpu":
+        "7bcf2a16cf445bdf607297ad9d4e961b304cca47f62716a709924904c2235493",
+}
+
+# 2-trial campaign reports (montecarlo.get(name, n_trials=2), workers=1)
+CAMPAIGN_GOLDENS = {
+    "fleet_smoke":
+        "48cda1db6f506cf5840581c2b6b10fe166fc8f48b567e87d2a0ac1ea8223c09c",
+    "fleet_mixed":
+        "af4288a9d17ab5401299575ed14f71c6851032aa52558c5379054ecd49c57185",
+}
+
+_SLO_COUNTER_KEYS = ("tenant_s", "violation_s", "downtime_s",
+                     "mttr_events", "mttr_violations", "mttr_excess_s")
+
+
+def _hash(obj) -> str:
+    blob = json.dumps(obj, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+@pytest.fixture(scope="module")
+def hour_report():
+    return fleet.run_fleet(fleet.get("fleet_hour")).to_json()
+
+
+# ---------------------------------------------------------------------------
+# pre-PR goldens: the batch path is bit-frozen
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(DRILL_GOLDENS))
+def test_drill_reports_bit_identical_to_pre_pr_goldens(name):
+    rep = run_scenario(library.get(name))
+    assert _hash(rep) == DRILL_GOLDENS[name]
+
+
+@pytest.mark.parametrize("name", sorted(CAMPAIGN_GOLDENS))
+def test_campaign_reports_bit_identical_to_pre_pr_goldens(name):
+    cam = montecarlo.get(name, n_trials=2)
+    rep = montecarlo.run_campaign(cam, workers=1)
+    assert _hash(rep.to_json()) == CAMPAIGN_GOLDENS[name]
+
+
+# ---------------------------------------------------------------------------
+# fleet determinism
+# ---------------------------------------------------------------------------
+
+def test_fleet_bit_identical_across_runs_and_workers(hour_report):
+    again = fleet.run_fleet(fleet.get("fleet_hour"), workers=4).to_json()
+    assert _hash(again) == _hash(hour_report)
+
+
+def test_fleet_snapshot_resume_matches_uninterrupted(hour_report):
+    spec = fleet.get("fleet_hour")
+    run = fleet.FleetRun(spec)
+    run.start()
+    run.run_to(spec.duration_s / 2)
+    snap = copy.deepcopy(run)            # mid-run snapshot of the live fleet
+    resumed = snap.finish().to_json()
+    continued = run.finish().to_json()
+    assert _hash(resumed) == _hash(continued) == _hash(hour_report)
+
+
+def test_fleet_stepping_cadence_is_irrelevant(hour_report):
+    """Stepping the kernel in odd increments (not aligned to any report
+    boundary) cannot change the report — the horizon-splitting contract."""
+    spec = fleet.get("fleet_hour")
+    run = fleet.FleetRun(spec)
+    run.start()
+    for frac in (0.13, 0.41, 0.77):
+        run.run_to(spec.duration_s * frac)
+    assert _hash(run.finish().to_json()) == _hash(hour_report)
+
+
+# ---------------------------------------------------------------------------
+# rolling == batch: one aggregation code path
+# ---------------------------------------------------------------------------
+
+def test_rolling_final_aggregates_equal_batch_fold(hour_report):
+    segments = [r["segment"] for r in hour_report["rolling"]]
+    assert hour_report["aggregates"] == aggregate(segments)
+
+
+def test_every_rolling_boundary_equals_batch_prefix(hour_report):
+    segments = [r["segment"] for r in hour_report["rolling"]]
+    for i, r in enumerate(hour_report["rolling"]):
+        assert r["aggregates"] == aggregate(segments[:i + 1])
+
+
+# ---------------------------------------------------------------------------
+# SLO accounting
+# ---------------------------------------------------------------------------
+
+def test_slo_totals_have_zero_drift_vs_segment_fold(hour_report):
+    """Cumulative totals are running sums over closed segments, so the
+    fold reproduces them *exactly* — drift must be 0.0, not just small."""
+    slo = hour_report["slo"]
+    for key in _SLO_COUNTER_KEYS:
+        folded = sum(r["slo_segment"][key] for r in hour_report["rolling"])
+        assert folded - slo[key] == 0
+
+
+def test_per_tenant_slo_records_are_consistent(hour_report):
+    slo = hour_report["slo"]
+    ten = hour_report["tenants"]
+    per = slo["per_tenant"]
+    assert per and per[0]["job_id"] == 0           # anchor is accounted too
+    # every tenant-second is attributed to exactly one tenant record
+    assert sum(r["active_s"] for r in per) == pytest.approx(slo["tenant_s"])
+    assert sum(r["violation_s"] for r in per) == pytest.approx(
+        slo["violation_s"])
+    for r in per:
+        assert 0.0 <= r["violation_s"] <= r["active_s"] + 1e-9
+        assert r["downtime_s"] <= r["violation_s"] + 1e-9
+    # arrivals/departures reconcile with the records (minus the anchor)
+    assert ten["arrived"] == len(per) - 1
+    assert ten["departed"] == sum(
+        1 for r in per[1:] if r["departed_t"] is not None)
+
+
+def test_fleet_report_has_live_tenant_process(hour_report):
+    """The continuous layer actually exercised churn: arrivals happened,
+    rolling segments were emitted at the configured cadence, and the
+    final report carries the SLO block the CI job asserts on."""
+    assert hour_report["tenants"]["arrived"] > 0
+    assert hour_report["n_segments"] >= 4
+    period = hour_report["fleet"]["report_period_s"]
+    for r in hour_report["rolling"][:-1]:
+        assert r["t"] == pytest.approx((r["segment_index"] + 1) * period)
+    assert set(_SLO_COUNTER_KEYS) <= set(hour_report["slo"])
+
+
+# ---------------------------------------------------------------------------
+# tier-2 pacing: the fleet keeps up with its own streaming cadence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier2
+def test_fleet_tick_faster_than_streaming_cadence_at_1024_ranks():
+    """A 1024-rank fleet must simulate faster than real time: one report
+    period (which contains the streaming ingests, the segment close, and
+    all live-process churn) must cost far less wall time than the
+    streaming cadence it simulates."""
+    spec = fleet.get("fleet_hour", gpus=1024, ranks_per_node=8,
+                     duration_s=1800.0, streaming_tick_s=900.0,
+                     report_period_s=900.0)
+    run = fleet.FleetRun(spec)
+    run.start()
+    t0 = time.perf_counter()
+    run.finish()
+    wall = time.perf_counter() - t0
+    # two streaming windows + two segment closes simulated; require the
+    # whole run under one cadence (measured ~1 s: two orders of headroom)
+    assert wall < spec.streaming_tick_s

@@ -53,20 +53,16 @@ def _detect_rows(quick: bool) -> None:
 def _batched_rows(quick: bool) -> None:
     from repro.core.c4d.detector import C4DDetector, DetectorConfig
     from repro.core.faults import Fault, RingJobTelemetry
-    from repro.core.jaxsim.detectors import pack_pairs, score_windows_batched
+    from repro.core.jaxsim.detectors import score_windows_batched
 
     n, b = 1024, 8
     cfg = DetectorConfig()
     tel = RingJobTelemetry(n_ranks=n, seed=7)
     wins = [tel.window_arrays(i, [Fault("slow_src", rank=5)] if i % 2 else [])
             for i in range(b)]
-    packed = [pack_pairs(w, n) for w in wins]
-    keys = np.stack([p[0] for p in packed])
-    dv = np.stack([p[1] for p in packed])
-    wv = np.stack([p[2] for p in packed])
-    score_windows_batched(keys, dv, wv, cfg, n)  # compile
+    score_windows_batched(wins, cfg, n)  # compile
     repeats = 1 if quick else 3
-    us = timeit(lambda: score_windows_batched(keys, dv, wv, cfg, n),
+    us = timeit(lambda: score_windows_batched(wins, cfg, n),
                 repeats=repeats)
     det = C4DDetector(backend="jax")
     det.analyze(wins[0], n)
@@ -139,3 +135,24 @@ def run(quick: bool = False) -> None:
     _batched_rows(quick)
     _waterfill_row(quick)
     _ewma_row(quick)
+    _cache_info_row()
+
+
+def _cache_info_row() -> None:
+    """Zero-cost debug row: jit/layout cache occupancy after the suite —
+    the ``jaxsim.cache_info()`` helper surfaced in ``--json`` artifacts
+    (a long fleet run growing these without bound was the bug the bounded
+    factories fixed)."""
+    from repro.core.jaxsim import cache_info
+
+    info = cache_info()
+    lay = info["window_layouts"]
+    emit("jaxsim/cache_info", 0.0, {
+        "factory_maxsize": info["factory_maxsize"],
+        "factory_entries": sum(s["size"] for s in info["factories"].values()),
+        "jit_entries": sum(v for v in info["jit_entries"].values()
+                           if v is not None),
+        "layouts": f"{lay['entries']}/{lay['max_entries']}",
+        "layout_hit_rate":
+            f"{lay['hits'] / max(lay['hits'] + lay['misses'], 1):.2f}",
+    })

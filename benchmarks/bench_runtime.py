@@ -9,8 +9,10 @@ Two costs bound how far the service architecture scales:
     events through one kernel, which is what motivated the sort-then-merge
     drain (docs/runtime.md has the before/after table);
   * **streaming tick** — one always-on C4D monitoring window (vectorized
-    telemetry synthesis + master ingest) at 1024 ranks, the per-tick cost
-    that motivates the coarser ``streaming_tick_s`` on large campaigns.
+    telemetry synthesis + master ingest) at 64 / 1024 ranks on the default
+    backend, plus the ``fleet_day``-sized 10,240-rank tick through
+    ``backend="auto"`` (the fused jax pipeline) — the per-tick cost that
+    sets how fine a ``streaming_tick_s`` large fleets afford.
 
 Rows: ``runtime/bus_<n> , us_per_event , events_per_s`` and
 ``runtime/stream_tick_<ranks> , us_per_tick , ms_per_window``.
@@ -56,17 +58,21 @@ def bench_bus(n_events: int, n_services: int = 3) -> None:
           "services": n_services})
 
 
-def bench_stream_tick(n_ranks: int, repeats: int) -> None:
+def bench_stream_tick(n_ranks: int, repeats: int,
+                      backend: str = None) -> None:
     tel = RingJobTelemetry(n_ranks=n_ranks, seed=3)
-    master = C4DMaster(n_ranks=n_ranks, ranks_per_node=8)
-    master.ingest(tel.window_arrays(0))          # warmup
+    master = C4DMaster(n_ranks=n_ranks, ranks_per_node=8, backend=backend)
+    for i in range(3):
+        master.ingest(tel.window_arrays(i))      # warmup (jit + pad buckets)
     t0 = time.perf_counter()
     for i in range(repeats):
-        master.ingest(tel.window_arrays(i + 1))
+        master.ingest(tel.window_arrays(i + 3))
     dt = (time.perf_counter() - t0) / repeats
-    emit(f"runtime/stream_tick_{n_ranks}", dt * 1e6,
-         {"ms_per_window": f"{dt * 1e3:.2f}",
-          "windows_per_s": f"{1.0 / dt:.1f}"})
+    derived = {"ms_per_window": f"{dt * 1e3:.2f}",
+               "windows_per_s": f"{1.0 / dt:.1f}"}
+    if backend is not None:
+        derived["backend"] = backend
+    emit(f"runtime/stream_tick_{n_ranks}", dt * 1e6, derived)
 
 
 def run(quick: bool = False) -> None:
@@ -77,6 +83,9 @@ def run(quick: bool = False) -> None:
         bench_bus(n)
     for n_ranks, repeats in ((64, 30), (1024, 5 if quick else 20)):
         bench_stream_tick(n_ranks, repeats)
+    # the fleet_day tick: 10,240 ranks through backend="auto" (routes to
+    # the fused jax pipeline; ~6.5 s on NumPy before the fused path)
+    bench_stream_tick(10_240, 2 if quick else 5, backend="auto")
 
 
 if __name__ == "__main__":

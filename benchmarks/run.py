@@ -46,6 +46,30 @@ BENCHES = [
 ]
 
 
+def headroom_table(rows: List[Dict[str, object]], budgets: Dict[str, dict],
+                   only: str = None) -> List[str]:
+    """Budget-vs-measured lines for the baseline update procedure: per
+    budgeted row, measured us/call, budget, and the headroom multiple —
+    the number the baselines.json note says to keep >= 10x."""
+    by_name = {r["name"]: r for r in rows}
+    lines = [f"{'row':<34} {'measured_us':>12} {'budget_us':>12} "
+             f"{'headroom':>9}"]
+    for name, budget in sorted(budgets.items()):
+        if only is not None and name.split("/", 1)[0] != only:
+            continue
+        row = by_name.get(name)
+        max_us = float(budget["max_us"])
+        if row is None:
+            lines.append(f"{name:<34} {'MISSING':>12} {max_us:>12.0f} "
+                         f"{'-':>9}")
+            continue
+        us = float(row["us_per_call"])
+        head = max_us / us if us > 0 else float("inf")
+        lines.append(f"{name:<34} {us:>12.0f} {max_us:>12.0f} "
+                     f"{head:>8.1f}x")
+    return lines
+
+
 def check_rows(rows: List[Dict[str, object]], budgets: Dict[str, dict],
                only: str = None) -> List[str]:
     """Compare emitted rows against the committed budgets.
@@ -76,7 +100,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true",
                     help="reduced repeats / scenario grid")
-    ap.add_argument("--backend", default=None, choices=["numpy", "jax"],
+    ap.add_argument("--backend", default=None,
+                    choices=["numpy", "jax", "auto"],
                     help="simulation kernel backend for the whole run "
                          "(default: REPRO_SIM_BACKEND env var or numpy)")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -84,6 +109,9 @@ def main() -> None:
     ap.add_argument("--check", default=None, metavar="BASELINES",
                     help="compare rows against the wall-clock budgets in "
                          "this JSON file; exit non-zero on regression")
+    ap.add_argument("--headroom", action="store_true",
+                    help="with --check: print the budget-vs-measured "
+                         "headroom table (the baseline update procedure)")
     args = ap.parse_args()
     tags = [t for t, _ in BENCHES]
     if args.only and args.only not in tags:
@@ -111,13 +139,23 @@ def main() -> None:
             print(f"{tag}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
     if args.json:
+        try:
+            from repro.core.jaxsim import cache_info
+            jaxsim_cache = cache_info()
+        except Exception:
+            jaxsim_cache = None
         with open(args.json, "w") as f:
             json.dump({"quick": args.quick, "failed": failed,
-                       **common.CONTEXT, "rows": common.ROWS},
+                       **common.CONTEXT, "jaxsim_cache": jaxsim_cache,
+                       "rows": common.ROWS},
                       f, indent=1, default=str)
     if args.check:
         with open(args.check) as f:
             budgets = json.load(f)["budgets"]
+        if args.headroom:
+            for line in headroom_table(common.ROWS, budgets,
+                                       only=args.only):
+                print(line)
         violations = check_rows(common.ROWS, budgets, only=args.only)
         if violations:
             print("perf budget violations:", file=sys.stderr)

@@ -5,6 +5,7 @@
 #   ./scripts/perf_smoke.sh --full                  # full benchmark grid
 #   ./scripts/perf_smoke.sh --json OUT.json         # quick suite, rows also as JSON (CI artifact)
 #   ./scripts/perf_smoke.sh --check baselines.json  # quick suite + perf-regression gate
+#   ./scripts/perf_smoke.sh --headroom              # gate + budget-vs-measured headroom table
 #   ./scripts/perf_smoke.sh --backend jax           # flip the kernel backend for the run
 #
 # Rows are CSV: name,us_per_call,derived (see benchmarks/common.py); the
@@ -17,18 +18,32 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 full=0
+headroom=0
 pass_args=()
 while [[ $# -gt 0 ]]; do
     case "$1" in
         --full)
             full=1; shift ;;
+        --headroom)
+            # headroom table needs a budgets file; default to the committed
+            # baselines unless an explicit --check was also given
+            headroom=1; shift ;;
         --json|--check|--backend)
             pass_args+=("$1" "$2"); shift 2 ;;
         *)
-            echo "usage: $0 [--full] [--json OUT.json] [--check BASELINES.json] [--backend numpy|jax]" >&2
+            echo "usage: $0 [--full] [--json OUT.json] [--check BASELINES.json] [--headroom] [--backend numpy|jax|auto]" >&2
             exit 2 ;;
     esac
 done
+
+if [[ $headroom == 1 ]]; then
+    has_check=0
+    for a in ${pass_args[@]+"${pass_args[@]}"}; do
+        [[ $a == --check ]] && has_check=1
+    done
+    [[ $has_check == 0 ]] && pass_args+=(--check benchmarks/baselines.json)
+    pass_args+=(--headroom)
+fi
 
 if [[ $full == 1 ]]; then
     exec python -m benchmarks.run ${pass_args[@]+"${pass_args[@]}"}

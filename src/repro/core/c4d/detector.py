@@ -353,12 +353,13 @@ class C4DDetector:
     def analyze(self, window: AnyWindow,
                 n_ranks: Optional[int] = None,
                 baseline: Optional["AdaptiveBaseline"] = None) -> List[Verdict]:
-        from repro.core.jaxsim import resolve_backend
-        if resolve_backend(self.backend) == "jax":
+        from repro.core.jaxsim import effective_backend
+        n = n_ranks or window.n_ranks()
+        if effective_backend(self.backend, ranks=n) == "jax":
             from repro.core.jaxsim.detectors import analyze_arrays
             arrays = (window if isinstance(window, TelemetryArrays)
                       else TelemetryArrays.from_window(window))
-            return analyze_arrays(arrays, self.cfg, n_ranks=n_ranks,
+            return analyze_arrays(arrays, self.cfg, n_ranks=n,
                                   baseline=baseline)
         verdicts = self.hang.analyze(window, baseline=baseline)
         if verdicts:

@@ -197,15 +197,50 @@ class C4DMaster:
         A ``TelemetryArrays`` window takes the vectorized fleet path (all
         agents prefiltered in one pass); a scalar ``TelemetryWindow`` runs
         the per-agent reference path.  Both produce identical verdicts."""
-        if isinstance(window, TelemetryArrays):
-            merged = prefilter_arrays(window, self.ranks_per_node,
-                                      suspect_z=self.agents[0].suspect_z,
-                                      n_ranks=self.n_ranks)
-        else:
-            reports = [a.collect(window) for a in self.agents]
-            merged = reports_to_window(reports, window)
+        merged = self._merge(window)
         verdicts = self.detector.analyze(merged, n_ranks=self.n_ranks,
                                          baseline=self.baseline)
+        return self._act(window, merged, verdicts)
+
+    def ingest_batch(self, windows: List[AnyWindow]) -> List[List[NodeAction]]:
+        """Ingest several monitoring windows, batching the detector.
+
+        Bit-identical to ``[self.ingest(w) for w in windows]``: the
+        confirmation/track state advances per window, in order.  When the
+        detector resolves to the jax backend and the master is
+        baseline-free (the legacy default — an adaptive baseline makes
+        window i+1 depend on window i, so those masters stay sequential),
+        all hang-free windows share vmapped fused/fold dispatches via
+        ``score_windows_batched`` instead of one dispatch per window."""
+        from repro.core.jaxsim import effective_backend
+        merged = [self._merge(w) for w in windows]
+        batchable = (len(windows) > 1 and self.baseline is None
+                     and all(isinstance(m, TelemetryArrays) for m in merged)
+                     and effective_backend(self.detector.backend,
+                                           ranks=self.n_ranks) == "jax")
+        if batchable:
+            from repro.core.jaxsim.detectors import score_windows_batched
+            scored = score_windows_batched(merged, self.detector.cfg,
+                                           n_ranks=self.n_ranks)
+        else:
+            scored = [self.detector.analyze(m, n_ranks=self.n_ranks,
+                                            baseline=self.baseline)
+                      for m in merged]
+        return [self._act(w, m, v)
+                for w, m, v in zip(windows, merged, scored)]
+
+    def _merge(self, window: AnyWindow) -> AnyWindow:
+        if isinstance(window, TelemetryArrays):
+            return prefilter_arrays(window, self.ranks_per_node,
+                                    suspect_z=self.agents[0].suspect_z,
+                                    n_ranks=self.n_ranks)
+        reports = [a.collect(window) for a in self.agents]
+        return reports_to_window(reports, window)
+
+    def _act(self, window: AnyWindow, merged: AnyWindow,
+             verdicts: List[Verdict]) -> List[NodeAction]:
+        """Post-detection half of a cycle: divergence, offline log,
+        attribution, node fold, confirmation streaks."""
         if self.divergence is not None and merged.train is not None:
             verdicts = list(verdicts) + self.divergence.analyze(merged.train)
         self.offline_log.append((window.window_id, verdicts))

@@ -271,8 +271,9 @@ def grouped_median(keys: np.ndarray, values: np.ndarray,
     medians.  The group-structure variant stays NumPy: its consumers are
     host-side prefilters.
     """
-    from repro.core.jaxsim import resolve_backend
-    if not return_groups and resolve_backend(backend) == "jax":
+    from repro.core.jaxsim import effective_backend
+    if (not return_groups
+            and effective_backend(backend, elements=keys.size) == "jax"):
         from repro.core.jaxsim.kernels import (PAD_KEY, enable_x64,
                                                grouped_median_kernel, pad_len)
         tp = pad_len(keys.size)

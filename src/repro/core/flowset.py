@@ -174,8 +174,8 @@ class FlowSet:
         if alive_pairs.any():
             touched[pair_link[alive_pairs]] = True
 
-        from repro.core.jaxsim import resolve_backend
-        if resolve_backend(backend) == "jax" and F and L:
+        from repro.core.jaxsim import effective_backend
+        if effective_backend(backend, flows=F) == "jax" and F and L:
             from repro.core.jaxsim.waterfill import waterfill_rates
             rate, remaining = waterfill_rates(pair_flow, pair_link, w,
                                               alive, cap)

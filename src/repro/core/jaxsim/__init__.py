@@ -31,8 +31,10 @@ import importlib.util
 import os
 from typing import Iterator, Optional, Tuple
 
-#: the selectable simulator backends (docs/jaxsim.md).
-BACKENDS: Tuple[str, ...] = ("numpy", "jax")
+#: the selectable simulator backends (docs/jaxsim.md).  ``"auto"`` picks
+#: per call site by problem size: NumPy below the measured crossover, jax
+#: above (and NumPy everywhere when jax is not installed).
+BACKENDS: Tuple[str, ...] = ("numpy", "jax", "auto")
 
 #: environment override consulted when no explicit scope is active.
 BACKEND_ENV = "REPRO_SIM_BACKEND"
@@ -98,3 +100,58 @@ def use_backend(name: Optional[str]) -> Iterator[str]:
 def resolve_backend(name: Optional[str] = None) -> str:
     """Fold an optional per-call ``backend=`` argument against the default."""
     return get_default_backend() if name is None else _validate(name)
+
+
+# ---------------------------------------------------------------------------
+# size-based dispatch for backend="auto"
+# ---------------------------------------------------------------------------
+# Crossover thresholds measured on the dev box (docs/jaxsim.md has the
+# scaling tables behind them).  Below the threshold NumPy wins on wall
+# clock; at/above it the jit kernels win.
+
+#: detector windows: NumPy wins to ~128 ranks, jax from ~256 up (the fused
+#: pipeline moved the crossover down from ~1k).
+AUTO_DETECT_RANKS = 256
+
+#: grouped-median calls keyed by element count (telemetry prefilter).
+AUTO_MEDIAN_ELEMENTS = 1 << 17
+
+#: water-filling never wins on CPU jax at feasible sizes (19 ms jit vs
+#: 2.3 ms NumPy on the fig2 topology) — effectively "always NumPy".
+AUTO_WATERFILL_FLOWS = 10 ** 9
+
+
+def effective_backend(name: Optional[str] = None, *,
+                      ranks: Optional[int] = None,
+                      elements: Optional[int] = None,
+                      flows: Optional[int] = None) -> str:
+    """Resolve ``name`` to a concrete backend (``"numpy"``/``"jax"``).
+
+    Non-auto names resolve exactly like ``resolve_backend``.  ``"auto"``
+    compares whichever size hint the call site supplies against that
+    call site's measured crossover, and falls back to NumPy when jax is
+    missing — so ``backend="auto"`` is always safe to request."""
+    resolved = resolve_backend(name)
+    if resolved != "auto":
+        return resolved
+    if not jax_available():
+        return "numpy"
+    if ranks is not None and ranks >= AUTO_DETECT_RANKS:
+        return "jax"
+    if elements is not None and elements >= AUTO_MEDIAN_ELEMENTS:
+        return "jax"
+    if flows is not None and flows >= AUTO_WATERFILL_FLOWS:
+        return "jax"
+    return "numpy"
+
+
+def cache_info() -> dict:
+    """Debug snapshot of the jit/layout caches (surfaced in benchmark
+    ``--json`` output).  Import-safe without jax installed."""
+    if not jax_available():
+        return {"available": False}
+    from repro.core.jaxsim import detectors, kernels
+    info = kernels.cache_info()
+    info["available"] = True
+    info["window_layouts"] = detectors.layout_cache_info()
+    return info

@@ -4,27 +4,41 @@
 same composite semantics (hang analysis pre-empts slow analysis; the
 adaptive baseline advances only on hang-free windows), same Verdict
 objects field-for-field (tests/test_jaxsim.py pins equality on the Table-3
-golden windows, score floats and detail strings included).
+golden windows, score floats and detail strings included).  It is the
+B = 1 case of ``score_windows_batched`` — every consumer (streaming
+master ingest, campaigns, benches) runs through the same fused pipeline.
 
-The division of labour:
+The fused pipeline per window (two device dispatches total):
 
-  * device (``kernels``): grouped pair medians (the sort-heavy part), the
-    z folds and per-rank segment reductions, heartbeat-deficit scoring —
-    everything that is O(transports) or O(n) and contraction-safe;
-  * host (this module): padding to the static-shape buckets, the per-group
-    z centers/scales (``_mixed_center_scale`` — MAD math stays in NumPy so
-    XLA's FMA contraction cannot shift the last ulp; see kernels.py),
-    building the small Verdict list from the fold masks, and folding the
-    window back into the NumPy ``AdaptiveBaseline`` (``update_cells`` —
-    the same winsorized math, so a jax-backend streaming master stays
-    bit-compatible with the NumPy one window for window).
+  1. host: group the transport keys (``_layout_for`` — a radix
+     ``np.argsort`` plus run-length extents, cached across windows with
+     identical layouts, which a steady telemetry stream repeats) and
+     scatter delay/wait values into the ``(2, g_pad, m_pad)`` per-group
+     matrix;
+  2. device (``fused_window_kernel``): segmented pair medians (row sorts)
+     + heartbeat hang scoring, one jit boundary;
+  3. host: hang pre-emption, then the per-group z centers/scales
+     (``_mixed_center_scale`` — MAD math stays in NumPy so XLA's FMA
+     contraction cannot shift the last ulp; see kernels.py);
+  4. device (``slow_fold_kernel``): z folds -> row/col/point/wait verdict
+     bits;
+  5. host: the small Verdict list, and the NumPy ``AdaptiveBaseline``
+     advance (``update_cells`` — the same winsorized math, so a
+     jax-backend streaming master stays bit-compatible with the NumPy one
+     window for window).
 
-``score_windows_batched`` is the vmap entry the campaign/bench layer uses
-to score many same-shape windows as one device computation.
+The MAD center/scale step is why the pipeline is two dispatches rather
+than one: it must run in NumPy for bit identity, and it consumes the
+medians, so a single fused boundary would put ``a*b + c`` chains back on
+the exact path.  Everything around it is fused.
+
+``analyze_arrays_reference`` keeps the PR 7 per-kernel path (global
+two-key sort + separate hang dispatch) verbatim — the equivalence suite
+pins fused == per-kernel == NumPy on the golden windows.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -33,12 +47,102 @@ from repro.core.c4d.detector import (COMM_HANG, COMM_SLOW_DST, COMM_SLOW_LINK,
                                      COMM_SLOW_SRC, DetectorConfig,
                                      NONCOMM_HANG, NONCOMM_SLOW, Verdict)
 from repro.core.c4d.telemetry import TelemetryArrays
-from repro.core.jaxsim.kernels import (PAD_KEY, batched_pair_median_kernel,
+from repro.core.jaxsim.kernels import (PAD_KEY, batched_fused_window_kernel,
                                        batched_slow_fold_kernel, enable_x64,
-                                       hang_kernel, pad_len,
-                                       pair_median_kernel, slow_fold_kernel)
+                                       fused_window_kernel, hang_kernel,
+                                       pad_len, pair_median_kernel,
+                                       slow_fold_kernel)
 
 import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# window layouts: host-side group structure, cached across windows
+# ---------------------------------------------------------------------------
+
+class _WindowLayout:
+    """Group structure of one window's transport key array.
+
+    ``scatter`` maps each transport (original order) to its flat slot in
+    the ``(g_pad, m_pad)`` per-group value matrix:
+    ``mat.reshape(-1)[scatter] = values``.  Everything here depends only
+    on the *keys*, and a steady telemetry stream emits the same key layout
+    window after window (same iteration/stride/rank structure), so the
+    whole object is cached and re-validated with one memcmp (~7 ms at 3M
+    transports vs ~130 ms to rebuild)."""
+
+    __slots__ = ("keys", "n", "g", "g_pad", "m_pad", "scatter", "gkey",
+                 "counts", "gvalid")
+
+    def __init__(self, keys: np.ndarray, n: int):
+        t = keys.size
+        order = np.argsort(keys, kind="stable")   # radix sort on int64 keys
+        sk = keys[order]
+        if t:
+            starts = np.flatnonzero(np.r_[True, sk[1:] != sk[:-1]])
+            counts = np.diff(np.r_[starts, t])
+        else:
+            starts = np.zeros(0, np.int64)
+            counts = np.zeros(0, np.int64)
+        g = starts.size
+        self.keys = keys.copy()
+        self.n = n
+        self.g = g
+        self.g_pad = pad_len(g)
+        self.m_pad = pad_len(int(counts.max()) if g else 1)
+        gid = np.repeat(np.arange(g, dtype=np.int64), counts)
+        col = np.arange(t, dtype=np.int64) - np.repeat(starts, counts)
+        scatter = np.empty(t, np.int64)
+        scatter[order] = gid * self.m_pad + col
+        self.scatter = scatter
+        self.gkey = np.full(self.g_pad, PAD_KEY, np.int64)
+        self.gkey[:g] = sk[starts]
+        self.counts = np.zeros(self.g_pad, np.int64)
+        self.counts[:g] = counts
+        self.gvalid = np.zeros(self.g_pad, bool)
+        self.gvalid[:g] = True
+
+
+#: most-recent-first layout cache.  Bounded two ways: entry count and total
+#: cached elements (a 100k-rank layout holds ~6M int64s, so the element
+#: budget keeps the cache to a couple of giant layouts instead of eight).
+_LAYOUT_CACHE: List[_WindowLayout] = []
+_LAYOUT_CACHE_MAX = 8
+_LAYOUT_CACHE_MAX_ELEMENTS = 16_000_000
+_layout_hits = 0
+_layout_misses = 0
+
+
+def _layout_for(keys: np.ndarray, n: int) -> _WindowLayout:
+    global _layout_hits, _layout_misses
+    for i, lay in enumerate(_LAYOUT_CACHE):
+        if (lay.n == n and lay.keys.size == keys.size
+                and np.array_equal(lay.keys, keys)):
+            _layout_hits += 1
+            if i:
+                _LAYOUT_CACHE.insert(0, _LAYOUT_CACHE.pop(i))
+            return lay
+    _layout_misses += 1
+    lay = _WindowLayout(keys, n)
+    _LAYOUT_CACHE.insert(0, lay)
+    total = 0
+    for i, entry in enumerate(_LAYOUT_CACHE):
+        total += 2 * entry.keys.size
+        if i and (i >= _LAYOUT_CACHE_MAX
+                  or total > _LAYOUT_CACHE_MAX_ELEMENTS):
+            del _LAYOUT_CACHE[i:]
+            break
+    return lay
+
+
+def layout_cache_info() -> dict:
+    """Occupancy/hit-rate of the host-side layout cache (part of
+    ``jaxsim.cache_info()``)."""
+    return {"entries": len(_LAYOUT_CACHE),
+            "max_entries": _LAYOUT_CACHE_MAX,
+            "elements": int(sum(2 * e.keys.size for e in _LAYOUT_CACHE)),
+            "max_elements": _LAYOUT_CACHE_MAX_ELEMENTS,
+            "hits": _layout_hits, "misses": _layout_misses}
 
 
 # ---------------------------------------------------------------------------
@@ -46,7 +150,9 @@ import jax.numpy as jnp
 # ---------------------------------------------------------------------------
 
 def pack_pairs(window: TelemetryArrays, n: int):
-    """(keys, delay values, wait values) padded to the bucket size.
+    """(keys, delay values, wait values) padded to the bucket size — the
+    element-aligned packing of the PR 7 per-kernel path (kept as the
+    reference the fused pipeline is pinned against).
 
     Keys are ``src * n + dst`` (the row-major cell id); padding slots carry
     ``PAD_KEY``/+inf so they sort last and group into invalid slots."""
@@ -67,6 +173,43 @@ def _pad_index(values: np.ndarray, size: int) -> np.ndarray:
     out = np.zeros(size, np.int64)
     out[:values.size] = values
     return out
+
+
+class _PackedWindow:
+    """One window's fused-kernel inputs (layout + scatter matrix + padded
+    heartbeats + per-rank deficit offsets)."""
+
+    __slots__ = ("layout", "vmat", "hb_rank", "hb_seq", "hb_valid",
+                 "offsets")
+
+    def __init__(self, window: TelemetryArrays, n: int, n_pad: int,
+                 baseline: Optional[AdaptiveBaseline]):
+        t = int(window.tr_src.size)
+        keys = (window.tr_src * n + window.tr_dst if t
+                else np.zeros(0, np.int64))
+        lay = _layout_for(keys, n)
+        vmat = np.full((2, lay.g_pad, lay.m_pad), np.inf)
+        if t:
+            flat = vmat.reshape(2, -1)
+            transfer = window.tr_transfer()
+            flat[0, lay.scatter] = transfer / np.maximum(window.tr_bytes, 1)
+            flat[1, lay.scatter] = window.tr_wait()
+        h = int(window.hb_rank.size)
+        hp = pad_len(h)
+        self.layout = lay
+        self.vmat = vmat
+        self.hb_rank = _pad_index(window.hb_rank, hp)
+        self.hb_seq = _pad_index(window.hb_seq, hp)
+        self.hb_valid = np.zeros(hp, bool)
+        self.hb_valid[:h] = True
+        self.offsets = np.zeros(n_pad)
+        if baseline is not None and n:
+            self.offsets[:n] = baseline.deficit_offset(np.arange(n))
+
+    def bucket(self):
+        """Static-shape signature: windows in the same bucket vmap
+        together."""
+        return (self.layout.g_pad, self.layout.m_pad, self.hb_rank.size)
 
 
 def _mixed_center_scale(values: np.ndarray, valid: np.ndarray,
@@ -106,50 +249,11 @@ def _mixed_center_scale(values: np.ndarray, valid: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# the composite analysis (drop-in for C4DDetector.analyze on arrays windows)
+# Verdict builders (shared by the fused, batched and reference paths)
 # ---------------------------------------------------------------------------
 
-def analyze_arrays(window: TelemetryArrays, cfg: DetectorConfig,
-                   n_ranks: Optional[int] = None,
-                   baseline: Optional[AdaptiveBaseline] = None
-                   ) -> List[Verdict]:
-    n = n_ranks or window.n_ranks()
-    n_pad = pad_len(n)
-    with enable_x64():
-        verdicts = _hang_verdicts(window, cfg, n, n_pad, baseline)
-        if verdicts:
-            # hangs pre-empt slow analysis and freeze the baseline —
-            # identical to the NumPy composite
-            return verdicts
-        verdicts, gkey, valid, dmed, wmed = _slow_verdicts(
-            window, cfg, n, n_pad, baseline)
-    if baseline is not None:
-        _advance_baseline(window, cfg, n, baseline, gkey, valid, dmed, wmed)
-    return verdicts
-
-
-def _hang_verdicts(window, cfg, n, n_pad, baseline):
-    h = int(window.hb_rank.size)
-    hp = pad_len(h)
-    hb_valid = np.zeros(hp, bool)
-    hb_valid[:h] = True
-    t = int(window.tr_src.size)
-    sp = pad_len(t)
-    src_valid = np.zeros(sp, bool)
-    src_valid[:t] = True
-    offsets = np.zeros(n_pad)
-    if baseline is not None and n:
-        offsets[:n] = baseline.deficit_offset(np.arange(n))
-    res = hang_kernel(
-        _pad_index(window.hb_rank, hp), _pad_index(window.hb_seq, hp),
-        hb_valid, _pad_index(window.tr_src, sp), src_valid,
-        jnp.asarray(offsets), cfg.hang_grace, n_pad=n_pad)
-    hung = np.asarray(res["hung"])
-    if not hung.any():
-        return []
-    seqs = np.asarray(res["seqs"])
-    med = float(res["med"])
-    is_src = np.asarray(res["is_src"])
+def _hang_verdict_list(hung: np.ndarray, seqs: np.ndarray, med: float,
+                       is_src: np.ndarray) -> List[Verdict]:
     out = []
     for r in np.flatnonzero(hung):
         s = int(seqs[r])
@@ -159,35 +263,7 @@ def _hang_verdicts(window, cfg, n, n_pad, baseline):
     return out
 
 
-def _compact_groups(k, dmed, wmed, rep):
-    """Compact the element-aligned kernel output to one slot per real group
-    (ascending key order, padded to the group bucket).  Keeps the fold
-    kernel's input ~|iters| times smaller than the transport count."""
-    idx = np.flatnonzero(rep)
-    g = idx.size
-    gp = pad_len(g)
-    gkey = np.full(gp, PAD_KEY, np.int64)
-    dm = np.zeros(gp)
-    wm = np.zeros(gp)
-    valid = np.zeros(gp, bool)
-    gkey[:g] = k[idx]
-    dm[:g] = dmed[idx]
-    wm[:g] = wmed[idx]
-    valid[:g] = True
-    return gkey, dm, wm, valid
-
-
-def _slow_verdicts(window, cfg, n, n_pad, baseline):
-    keys, dv, wv, t = pack_pairs(window, n)
-    k_e, dmed_e, wmed_e, _, rep_e, _ = pair_median_kernel(keys, dv, wv)
-    gkey, dmed, wmed, valid = _compact_groups(
-        np.asarray(k_e), np.asarray(dmed_e), np.asarray(wmed_e),
-        np.asarray(rep_e))
-    cd, sd = _mixed_center_scale(dmed, valid, gkey, n, baseline, "delay")
-    cw, sw = _mixed_center_scale(wmed, valid, gkey, n, baseline, "wait")
-    res = slow_fold_kernel(gkey, valid, dmed, wmed, cd, sd, cw, sw,
-                           cfg.mad_threshold, cfg.row_col_fraction,
-                           cfg.min_observations, n=n, n_pad=n_pad)
+def _fold_verdict_list(res: dict, gkey: np.ndarray, n: int) -> List[Verdict]:
     verdicts: List[Verdict] = []
     row_sel = np.asarray(res["row_sel"])[:n]
     row_score = np.asarray(res["row_score"])
@@ -218,7 +294,216 @@ def _slow_verdicts(window, cfg, n, n_pad, baseline):
         verdicts.append(Verdict(NONCOMM_SLOW, rank=int(i),
                                 score=float(wait_score[i]),
                                 detail="receiver wait w/ healthy transfer"))
-    return verdicts, gkey, valid, dmed, wmed
+    return verdicts
+
+
+# ---------------------------------------------------------------------------
+# the composite analysis (drop-in for C4DDetector.analyze on arrays windows)
+# ---------------------------------------------------------------------------
+
+def analyze_arrays(window: TelemetryArrays, cfg: DetectorConfig,
+                   n_ranks: Optional[int] = None,
+                   baseline: Optional[AdaptiveBaseline] = None
+                   ) -> List[Verdict]:
+    """One window through the fused pipeline — the B = 1 case of
+    ``score_windows_batched``."""
+    return score_windows_batched([window], cfg, n_ranks=n_ranks,
+                                 baseline=baseline)[0]
+
+
+def _score_single(window: TelemetryArrays, cfg: DetectorConfig, n: int,
+                  n_pad: int, baseline: Optional[AdaptiveBaseline]
+                  ) -> List[Verdict]:
+    """Fused scoring of one window (two dispatches), baseline advance
+    included — the unit the sequential paths share."""
+    pw = _PackedWindow(window, n, n_pad, baseline)
+    lay = pw.layout
+    with enable_x64():
+        res = fused_window_kernel(
+            pw.vmat, lay.counts, lay.gkey, lay.gvalid, pw.hb_rank,
+            pw.hb_seq, pw.hb_valid, jnp.asarray(pw.offsets),
+            cfg.hang_grace, n=n, n_pad=n_pad)
+        hung = np.asarray(res["hung"])
+        if hung.any():
+            # hangs pre-empt slow analysis and freeze the baseline —
+            # identical to the NumPy composite
+            return _hang_verdict_list(hung, np.asarray(res["seqs"]),
+                                      float(res["med"]),
+                                      np.asarray(res["is_src"]))
+        dmed = np.asarray(res["dmed"])
+        wmed = np.asarray(res["wmed"])
+        cd, sd = _mixed_center_scale(dmed, lay.gvalid, lay.gkey, n,
+                                     baseline, "delay")
+        cw, sw = _mixed_center_scale(wmed, lay.gvalid, lay.gkey, n,
+                                     baseline, "wait")
+        fold = slow_fold_kernel(lay.gkey, lay.gvalid, dmed, wmed, cd, sd,
+                                cw, sw, cfg.mad_threshold,
+                                cfg.row_col_fraction, cfg.min_observations,
+                                n=n, n_pad=n_pad)
+        verdicts = _fold_verdict_list(fold, lay.gkey, n)
+    if baseline is not None:
+        _advance_baseline(window, cfg, n, baseline, lay.gkey, lay.gvalid,
+                          dmed, wmed)
+    return verdicts
+
+
+def score_windows_batched(windows: Sequence[TelemetryArrays],
+                          cfg: DetectorConfig,
+                          n_ranks: Optional[int] = None,
+                          baseline: Optional[AdaptiveBaseline] = None
+                          ) -> List[List[Verdict]]:
+    """Score B windows end to end; returns one full Verdict list per
+    window (hang pre-emption included) in input order.
+
+    Windows sharing a static-shape bucket (group/pad/heartbeat sizes) are
+    scored as ONE vmapped fused dispatch, then the hang-free survivors
+    share one vmapped fold dispatch per bucket — the campaign/streaming
+    batch entry.  With an adaptive ``baseline`` the windows are scored
+    sequentially instead: the EWMA advances between windows, so window i+1
+    is not independent of window i and batching would change verdicts (the
+    legacy default master is baseline-free, which is where the batch path
+    applies)."""
+    wins = list(windows)
+    if not wins:
+        return []
+    n = n_ranks or wins[0].n_ranks()
+    n_pad = pad_len(n)
+    if baseline is not None or len(wins) == 1:
+        return [_score_single(w, cfg, n, n_pad, baseline) for w in wins]
+
+    packs = [_PackedWindow(w, n, n_pad, None) for w in wins]
+    buckets: dict = {}
+    for i, pw in enumerate(packs):
+        buckets.setdefault(pw.bucket(), []).append(i)
+
+    results: List[Optional[List[Verdict]]] = [None] * len(wins)
+    slow: dict = {}          # g_pad -> [(index, dmed, wmed)]
+    with enable_x64():
+        fused_fn = batched_fused_window_kernel(n, n_pad)
+        for idxs in buckets.values():
+            res = fused_fn(
+                np.stack([packs[i].vmat for i in idxs]),
+                np.stack([packs[i].layout.counts for i in idxs]),
+                np.stack([packs[i].layout.gkey for i in idxs]),
+                np.stack([packs[i].layout.gvalid for i in idxs]),
+                np.stack([packs[i].hb_rank for i in idxs]),
+                np.stack([packs[i].hb_seq for i in idxs]),
+                np.stack([packs[i].hb_valid for i in idxs]),
+                np.stack([packs[i].offsets for i in idxs]),
+                cfg.hang_grace)
+            res = {k: np.asarray(v) for k, v in res.items()}
+            for b, i in enumerate(idxs):
+                hung = res["hung"][b]
+                if hung.any():
+                    results[i] = _hang_verdict_list(
+                        hung, res["seqs"][b], float(res["med"][b]),
+                        res["is_src"][b])
+                else:
+                    slow.setdefault(packs[i].layout.g_pad, []).append(
+                        (i, res["dmed"][b], res["wmed"][b]))
+
+        fold_fn = batched_slow_fold_kernel(n, n_pad)
+        for entries in slow.values():
+            gkey = np.stack([packs[i].layout.gkey for i, _, _ in entries])
+            valid = np.stack([packs[i].layout.gvalid for i, _, _ in entries])
+            dmed = np.stack([d for _, d, _ in entries])
+            wmed = np.stack([w for _, _, w in entries])
+            cd = np.empty_like(dmed)
+            sd = np.empty_like(dmed)
+            cw = np.empty_like(wmed)
+            sw = np.empty_like(wmed)
+            for b, (i, _, _) in enumerate(entries):
+                cd[b], sd[b] = _mixed_center_scale(
+                    dmed[b], valid[b], gkey[b], n, None, "delay")
+                cw[b], sw[b] = _mixed_center_scale(
+                    wmed[b], valid[b], gkey[b], n, None, "wait")
+            fold = fold_fn(gkey, valid, dmed, wmed, cd, sd, cw, sw,
+                           cfg.mad_threshold, cfg.row_col_fraction,
+                           cfg.min_observations)
+            fold = {k: np.asarray(v) for k, v in fold.items()}
+            for b, (i, _, _) in enumerate(entries):
+                results[i] = _fold_verdict_list(
+                    {k: v[b] for k, v in fold.items()}, gkey[b], n)
+    return results        # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# the PR 7 per-kernel path, kept verbatim as the fused pipeline's reference
+# ---------------------------------------------------------------------------
+
+def analyze_arrays_reference(window: TelemetryArrays, cfg: DetectorConfig,
+                             n_ranks: Optional[int] = None,
+                             baseline: Optional[AdaptiveBaseline] = None
+                             ) -> List[Verdict]:
+    """The original three-dispatch analysis (separate ``hang_kernel``,
+    global two-key-sort ``pair_median_kernel``, then the fold).  The
+    equivalence suite pins ``analyze_arrays`` == this == the NumPy
+    composite on every golden window."""
+    n = n_ranks or window.n_ranks()
+    n_pad = pad_len(n)
+    with enable_x64():
+        verdicts = _hang_verdicts(window, cfg, n, n_pad, baseline)
+        if verdicts:
+            return verdicts
+        verdicts, gkey, valid, dmed, wmed = _slow_verdicts(
+            window, cfg, n, n_pad, baseline)
+    if baseline is not None:
+        _advance_baseline(window, cfg, n, baseline, gkey, valid, dmed, wmed)
+    return verdicts
+
+
+def _hang_verdicts(window, cfg, n, n_pad, baseline):
+    h = int(window.hb_rank.size)
+    hp = pad_len(h)
+    hb_valid = np.zeros(hp, bool)
+    hb_valid[:h] = True
+    t = int(window.tr_src.size)
+    sp = pad_len(t)
+    src_valid = np.zeros(sp, bool)
+    src_valid[:t] = True
+    offsets = np.zeros(n_pad)
+    if baseline is not None and n:
+        offsets[:n] = baseline.deficit_offset(np.arange(n))
+    res = hang_kernel(
+        _pad_index(window.hb_rank, hp), _pad_index(window.hb_seq, hp),
+        hb_valid, _pad_index(window.tr_src, sp), src_valid,
+        jnp.asarray(offsets), cfg.hang_grace, n_pad=n_pad)
+    hung = np.asarray(res["hung"])
+    if not hung.any():
+        return []
+    return _hang_verdict_list(hung, np.asarray(res["seqs"]),
+                              float(res["med"]), np.asarray(res["is_src"]))
+
+
+def _compact_groups(k, dmed, wmed, rep):
+    """Compact the element-aligned kernel output to one slot per real group
+    (ascending key order, padded to the group bucket)."""
+    idx = np.flatnonzero(rep)
+    g = idx.size
+    gp = pad_len(g)
+    gkey = np.full(gp, PAD_KEY, np.int64)
+    dm = np.zeros(gp)
+    wm = np.zeros(gp)
+    valid = np.zeros(gp, bool)
+    gkey[:g] = k[idx]
+    dm[:g] = dmed[idx]
+    wm[:g] = wmed[idx]
+    valid[:g] = True
+    return gkey, dm, wm, valid
+
+
+def _slow_verdicts(window, cfg, n, n_pad, baseline):
+    keys, dv, wv, t = pack_pairs(window, n)
+    k_e, dmed_e, wmed_e, _, rep_e, _ = pair_median_kernel(keys, dv, wv)
+    gkey, dmed, wmed, valid = _compact_groups(
+        np.asarray(k_e), np.asarray(dmed_e), np.asarray(wmed_e),
+        np.asarray(rep_e))
+    cd, sd = _mixed_center_scale(dmed, valid, gkey, n, baseline, "delay")
+    cw, sw = _mixed_center_scale(wmed, valid, gkey, n, baseline, "wait")
+    res = slow_fold_kernel(gkey, valid, dmed, wmed, cd, sd, cw, sw,
+                           cfg.mad_threshold, cfg.row_col_fraction,
+                           cfg.min_observations, n=n, n_pad=n_pad)
+    return _fold_verdict_list(res, gkey, n), gkey, valid, dmed, wmed
 
 
 def _advance_baseline(window, cfg, n, baseline, gkey, valid, dmed, wmed):
@@ -238,52 +523,3 @@ def _advance_baseline(window, cfg, n, baseline, gkey, valid, dmed, wmed):
         adj = deficit - baseline.deficit_offset(ranks)
         baseline.update_deficit(ranks, deficit.astype(float),
                                 exclude=adj >= cfg.hang_grace)
-
-
-# ---------------------------------------------------------------------------
-# batched scoring (vmap over campaign trials / windows)
-# ---------------------------------------------------------------------------
-
-def score_windows_batched(keys: np.ndarray, dvals: np.ndarray,
-                          wvals: np.ndarray, cfg: DetectorConfig, n: int):
-    """Score B same-bucket windows as one device computation.
-
-    ``keys``/``dvals``/``wvals`` are (B, T_pad) arrays packed with
-    ``pack_pairs``.  Returns the per-window fold masks/scores (row/col/
-    point/wait) as stacked NumPy arrays — the campaign layer reduces these
-    to per-trial verdict counts without a per-window dispatch."""
-    n_pad = pad_len(n)
-    b = keys.shape[0]
-    with enable_x64():
-        med_fn = batched_pair_median_kernel()
-        k_e, dmed_e, wmed_e, _, rep_e, _ = (np.asarray(x) for x in
-                                            med_fn(keys, dvals, wvals))
-        # compact every window to the shared group bucket so the fold
-        # vmaps over one static shape
-        reps = [np.flatnonzero(rep_e[i]) for i in range(b)]
-        gp = pad_len(max((r.size for r in reps), default=1))
-        gkey = np.full((b, gp), PAD_KEY, np.int64)
-        dmed = np.zeros((b, gp))
-        wmed = np.zeros((b, gp))
-        valid = np.zeros((b, gp), bool)
-        for i, idx in enumerate(reps):
-            g = idx.size
-            gkey[i, :g] = k_e[i, idx]
-            dmed[i, :g] = dmed_e[i, idx]
-            wmed[i, :g] = wmed_e[i, idx]
-            valid[i, :g] = True
-        cd, sd = np.zeros((b, gp)), np.ones((b, gp))
-        cw, sw = np.zeros((b, gp)), np.ones((b, gp))
-        for i in range(b):
-            cd[i], sd[i] = _mixed_center_scale(dmed[i], valid[i], gkey[i],
-                                               n, None, "delay")
-            cw[i], sw[i] = _mixed_center_scale(wmed[i], valid[i], gkey[i],
-                                               n, None, "wait")
-        fold_fn = batched_slow_fold_kernel(n, n_pad)
-        res = fold_fn(gkey, valid, dmed, wmed, cd, sd, cw, sw,
-                      cfg.mad_threshold, cfg.row_col_fraction,
-                      cfg.min_observations)
-        out = {k: np.asarray(v) for k, v in res.items()}
-        out["gkey"] = gkey
-        out["valid"] = valid
-        return out

@@ -94,8 +94,9 @@ class CampaignSpec:
     # The cost-optimal point comes from the ROC sweep
     # (``scenarios.precision``; CLI ``--sweep`` / ``--operating-point``).
     operating_point: Optional[OperatingPoint] = None
-    # simulation kernel backend per trial ("numpy" | "jax"); None inherits
-    # the module default so existing campaign goldens stay bit-identical
+    # simulation kernel backend per trial ("numpy" | "jax" | "auto" —
+    # size-based dispatch); None inherits the module default so existing
+    # campaign goldens stay bit-identical
     backend: Optional[str] = None
 
     def to_dict(self) -> dict:

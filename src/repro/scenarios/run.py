@@ -166,7 +166,8 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=None,
                     help="seed threaded through spec factories and campaign "
                          "samplers (default: each target's own default)")
-    ap.add_argument("--backend", default=None, choices=["numpy", "jax"],
+    ap.add_argument("--backend", default=None,
+                    choices=["numpy", "jax", "auto"],
                     help="simulation kernel backend for scenarios and "
                          "campaigns (default: REPRO_SIM_BACKEND env var "
                          "or numpy; see docs/jaxsim.md)")

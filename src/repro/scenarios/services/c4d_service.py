@@ -11,7 +11,11 @@ telemetry stream, and record layout are unchanged.
 
 **Always-on streaming** — a persistent ``C4DMaster`` fed one telemetry
 window per kernel tick (its own ``RingJobTelemetry`` stream, so the
-reference path's reproducibility is untouched).  The window synthesised at
+reference path's reproducibility is untouched).  The master inherits
+``spec.backend``; fleet-scale specs ship ``backend="auto"`` so the
+10,240-rank ingest routes to the fused jaxsim pipeline
+(``score_windows_batched`` — ~0.3 s/tick vs ~6.5 s on NumPy,
+docs/fleet.md) while testbed-sized fleets stay on NumPy.  The window synthesised at
 tick *t* carries the signatures of every fault active at *t*: injected
 node faults (visible from onset until the isolation completes and the node
 is swapped), the transient stall right after a link flap, and any steady

@@ -25,8 +25,9 @@ from repro.core.c4d.master import C4DMaster, OperatingPoint
 from repro.core.c4d.telemetry import delay_matrix, grouped_median, wait_matrix
 from repro.core.faults import RingJobTelemetry
 from repro.core.flowset import FlowSet
-from repro.core.jaxsim import (BackendError, jax_available, resolve_backend,
-                               use_backend)
+from repro.core.jaxsim import (AUTO_DETECT_RANKS, AUTO_MEDIAN_ELEMENTS,
+                               BackendError, cache_info, effective_backend,
+                               jax_available, resolve_backend, use_backend)
 
 from tests.test_c4d_vectorized import GOLDEN_FAULTS, N
 from tests.test_netsim_perf import FABRIC_1024GPU, _random_scenario
@@ -70,6 +71,47 @@ def test_registry_rejects_unknown():
             pass
 
 
+def test_auto_backend_validates_without_jax():
+    # "auto" must be requestable on numpy-only installs (it just resolves
+    # to numpy everywhere) — unlike "jax", which raises when missing
+    assert resolve_backend("auto") == "auto"
+    with use_backend("auto"):
+        assert resolve_backend(None) == "auto"
+
+
+def test_effective_backend_size_dispatch():
+    assert effective_backend("numpy", ranks=10 ** 6) == "numpy"
+    if jax_available():
+        assert effective_backend("jax", ranks=1) == "jax"
+        assert effective_backend("auto",
+                                 ranks=AUTO_DETECT_RANKS - 1) == "numpy"
+        assert effective_backend("auto", ranks=AUTO_DETECT_RANKS) == "jax"
+        assert effective_backend(
+            "auto", elements=AUTO_MEDIAN_ELEMENTS) == "jax"
+        assert effective_backend(
+            "auto", elements=AUTO_MEDIAN_ELEMENTS - 1) == "numpy"
+        # CPU water-filling never crosses over; no hint at all -> numpy
+        assert effective_backend("auto", flows=10 ** 6) == "numpy"
+        assert effective_backend("auto") == "numpy"
+    else:
+        assert effective_backend("auto", ranks=10 ** 6) == "numpy"
+
+
+def test_cache_info_shape():
+    info = cache_info()
+    if not jax_available():
+        assert info == {"available": False}
+        return
+    assert info["available"]
+    assert info["factory_maxsize"] > 0
+    for stats in info["factories"].values():
+        assert stats["maxsize"] == info["factory_maxsize"]
+        assert stats["size"] <= stats["maxsize"]
+    assert "fused_window_kernel" in info["jit_entries"]
+    lay = info["window_layouts"]
+    assert lay["entries"] <= lay["max_entries"]
+
+
 # ---------------------------------------------------------------------------
 # perf-gate row checker (no jax required)
 # ---------------------------------------------------------------------------
@@ -109,7 +151,8 @@ def test_committed_baselines_cover_the_jaxsim_rows():
         budgets = json.load(f)["budgets"]
     for name in ("jaxsim/detect_1024", "jaxsim/detect_16384",
                  "jaxsim/detect_100000", "jaxsim/detect_batched_1024",
-                 "jaxsim/waterfill_fig2", "jaxsim/ewma_scan"):
+                 "jaxsim/waterfill_fig2", "jaxsim/ewma_scan",
+                 "runtime/stream_tick_1024", "runtime/stream_tick_10240"):
         assert name in budgets and budgets[name]["max_us"] > 0, name
 
 
@@ -180,37 +223,78 @@ def test_streaming_master_and_baseline_identical(op):
                                       mb.baseline._count[k])
 
 
+#: ring sizes landing the window's transport count (and n_pad) in three
+#: different power-of-two pad buckets — the fused kernels recompile per
+#: bucket, so equivalence must hold in each
+PAD_BUCKET_RANKS = (N, 48, 96)
+
+
 @requires_jax
-def test_batched_scorer_matches_per_window_folds():
-    """vmap-batched scoring selects the same rows/cols/points/waits as the
-    per-window kernels on a mixed batch of clean + faulty windows."""
-    from repro.core.jaxsim.detectors import pack_pairs, score_windows_batched
+@pytest.mark.parametrize("n", PAD_BUCKET_RANKS)
+@pytest.mark.parametrize("faults", GOLDEN_FAULTS)
+def test_fused_equals_per_kernel_equals_numpy(faults, n):
+    """The tentpole contract, per golden window and pad bucket: the fused
+    single-dispatch pipeline, the PR 7 per-kernel path, and the NumPy
+    composite return the same Verdict list field-for-field (hang
+    pre-emption included)."""
+    from repro.core.jaxsim.detectors import (analyze_arrays,
+                                             analyze_arrays_reference)
+    cfg = DetectorConfig()
+    w = RingJobTelemetry(n_ranks=n, seed=9).window_arrays(0, faults)
+    ref = C4DDetector().analyze(w, n)
+    fused = analyze_arrays(w, cfg, n_ranks=n)
+    per_kernel = analyze_arrays_reference(w, cfg, n_ranks=n)
+    assert fused == ref
+    assert per_kernel == ref
+
+
+@requires_jax
+def test_batched_scorer_matches_per_window_verdicts():
+    """vmap-batched scoring returns the exact per-window Verdict lists on a
+    mixed batch of clean, slow and hang windows (hang windows take the
+    batched hang branch; the rest share the vmapped fold)."""
+    from repro.core.jaxsim.detectors import (analyze_arrays,
+                                             score_windows_batched)
     cfg = DetectorConfig()
     tel = RingJobTelemetry(n_ranks=N, seed=11)
     wins = [tel.window_arrays(i, GOLDEN_FAULTS[i % len(GOLDEN_FAULTS)])
-            for i in range(6)]
-    packed = [pack_pairs(w, N) for w in wins]
-    keys = np.stack([p[0] for p in packed])
-    dv = np.stack([p[1] for p in packed])
-    wv = np.stack([p[2] for p in packed])
-    res = score_windows_batched(keys, dv, wv, cfg, N)
-    from repro.core.c4d.detector import (COMM_SLOW_DST, COMM_SLOW_LINK,
-                                         COMM_SLOW_SRC)
-    det = C4DDetector(backend="jax")
+            for i in range(12)]
+    batched = score_windows_batched(wins, cfg, n_ranks=N)
+    assert len(batched) == len(wins)
     for i, w in enumerate(wins):
-        verdicts = det.analyze(w, N)
-        rows = {v.rank for v in verdicts if v.syndrome == COMM_SLOW_SRC}
-        cols = {v.rank for v in verdicts if v.syndrome == COMM_SLOW_DST}
-        links = {v.link for v in verdicts if v.syndrome == COMM_SLOW_LINK}
-        # hang windows pre-empt slow analysis in analyze(); the batched
-        # scorer has no hang stage, so only compare hang-free windows
-        if any(v.syndrome in ("comm_hang", "noncomm_hang") for v in verdicts):
-            continue
-        assert set(np.flatnonzero(res["row_sel"][i][:N])) == rows, i
-        assert set(np.flatnonzero(res["col_sel"][i][:N])) == cols, i
-        pts = {divmod(int(res["gkey"][i][g]), N)
-               for g in np.flatnonzero(res["point"][i])}
-        assert pts == links, i
+        assert batched[i] == analyze_arrays(w, cfg, n_ranks=N), i
+
+
+@requires_jax
+def test_master_ingest_batch_bit_identical():
+    """``ingest_batch`` == sequential ``ingest`` — actions, order, and the
+    persistent confirmation streak state — and both equal the NumPy
+    master's actions window for window."""
+    cfgs = dict(n_ranks=N, ranks_per_node=8)
+    seq_np = C4DMaster(**cfgs)
+    seq_jx = C4DMaster(**cfgs, backend="jax")
+    bat_jx = C4DMaster(**cfgs, backend="jax")
+    tel_a = RingJobTelemetry(n_ranks=N, seed=13)
+    tel_b = RingJobTelemetry(n_ranks=N, seed=13)
+    tel_c = RingJobTelemetry(n_ranks=N, seed=13)
+    faults_per_win = [GOLDEN_FAULTS[i % len(GOLDEN_FAULTS)] for i in range(8)]
+    wins_a = [tel_a.window_arrays(i, f) for i, f in enumerate(faults_per_win)]
+    wins_b = [tel_b.window_arrays(i, f) for i, f in enumerate(faults_per_win)]
+    wins_c = [tel_c.window_arrays(i, f) for i, f in enumerate(faults_per_win)]
+    ref = [seq_np.ingest(w) for w in wins_a]
+    seq = [seq_jx.ingest(w) for w in wins_b]
+    bat = bat_jx.ingest_batch(wins_c)
+    assert bat == seq == ref
+    assert bat_jx._pending == seq_jx._pending == seq_np._pending
+
+
+def test_kernel_factory_caches_are_bounded():
+    if not jax_available():
+        pytest.skip("jax not installed")
+    from repro.core.jaxsim import kernels
+    assert kernels.FACTORY_CACHE_SIZE > 0
+    ci = kernels.batched_slow_fold_kernel.cache_info()
+    assert ci.maxsize == kernels.FACTORY_CACHE_SIZE
 
 
 # ---------------------------------------------------------------------------
